@@ -1,0 +1,46 @@
+"""Shared benchmark harness utilities: result persistence + claim checks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable
+
+OUT_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+
+class Claims:
+    """Collects named claim validations for a benchmark module."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.items: list[dict] = []
+
+    def check(self, claim: str, ok: bool, detail: str = "") -> bool:
+        self.items.append({"claim": claim, "ok": bool(ok), "detail": detail})
+        status = "PASS" if ok else "FAIL"
+        print(f"    [{status}] {claim}" + (f" — {detail}" if detail else ""))
+        return bool(ok)
+
+    @property
+    def all_ok(self) -> bool:
+        return all(i["ok"] for i in self.items)
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def run_module(name: str, fn: Callable[[bool], dict], quick: bool) -> dict:
+    print(f"[bench] {name}")
+    t0 = time.perf_counter()
+    out = fn(quick)
+    out["elapsed_s"] = round(time.perf_counter() - t0, 2)
+    save_result(name, out)
+    ok = out.get("all_ok", True)
+    print(f"[bench] {name}: {'OK' if ok else 'CLAIM FAILURES'} ({out['elapsed_s']}s)")
+    return out

@@ -1,0 +1,47 @@
+"""Fig. 15: unified vs grouped DPPU scalability (sizes 16…48, array 32×32).
+
+Paper claims: the grouped DPPU's effective capacity scales strictly with its
+size; the unified DPPU only scales at sizes that divide/multiply Col=32
+(16, 32) and is under-utilized at 24, 40, 48.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Claims
+from repro.core.redundancy import DPPUConfig, effective_capacity
+from repro.core.reliability import evaluate_scheme
+
+
+def run(quick: bool = False) -> dict:
+    n = 300 if quick else 2000
+    sizes = [16, 24, 32, 40, 48]
+    caps = {
+        "unified": {s: effective_capacity(DPPUConfig(size=s, unified=True), 32) for s in sizes},
+        "grouped": {s: effective_capacity(DPPUConfig(size=s, group_size=8), 32) for s in sizes},
+    }
+    # FFP at a PER where capacity differences matter (expected faults ~ 26)
+    per = 0.0255
+    ffp = {}
+    for kind in ("unified", "grouped"):
+        for s in sizes:
+            cfg = DPPUConfig(size=s, unified=(kind == "unified"), group_size=8)
+            r = evaluate_scheme("HyCA", per, n_configs=n, dppu=cfg)
+            ffp.setdefault(kind, {})[s] = r.fully_functional_prob
+
+    c = Claims("fig15")
+    c.check(
+        "grouped capacity scales strictly with DPPU size",
+        all(caps["grouped"][sizes[i]] < caps["grouped"][sizes[i + 1]] for i in range(len(sizes) - 1)),
+        str(caps["grouped"]),
+    )
+    c.check(
+        "unified capacity scales at 16 and 32 only",
+        caps["unified"][16] == 16 and caps["unified"][32] == 32
+        and caps["unified"][24] < 24 and caps["unified"][40] < 40 and caps["unified"][48] < 48,
+        str(caps["unified"]),
+    )
+    c.check(
+        "grouped FFP >= unified FFP at sizes 24/40/48",
+        all(ffp["grouped"][s] >= ffp["unified"][s] - 0.02 for s in (24, 40, 48)),
+        f"grouped={ffp['grouped']}, unified={ffp['unified']}",
+    )
+    return {"capacity": caps, "ffp": ffp, "per": per, "claims": c.items, "all_ok": c.all_ok}

@@ -1,0 +1,62 @@
+"""Benchmark harness driver: one module per paper table/figure plus the
+beyond-paper cluster benchmark.  ``python -m benchmarks.run [--quick]``.
+
+Each module validates the paper's claims (DESIGN.md §7 fidelity ledger) and
+persists its raw numbers under experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import run_module
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced Monte-Carlo counts")
+    ap.add_argument("--only", default="", help="comma-separated module names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        cluster_ffp,
+        fig02_accuracy_vs_per,
+        fig03_motivation_ffp,
+        fig09_area,
+        fig10_ffp,
+        fig11_computing_power,
+        fig12_performance,
+        fig13_runtime_vs_size,
+        fig14_scalability,
+        fig15_dppu_grouping,
+        tab01_detection,
+    )
+
+    modules = {
+        "fig02_accuracy_vs_per": fig02_accuracy_vs_per.run,
+        "fig03_motivation_ffp": fig03_motivation_ffp.run,
+        "fig09_area": fig09_area.run,
+        "fig10_ffp": fig10_ffp.run,
+        "fig11_computing_power": fig11_computing_power.run,
+        "fig12_performance": fig12_performance.run,
+        "fig13_runtime_vs_size": fig13_runtime_vs_size.run,
+        "fig14_scalability": fig14_scalability.run,
+        "fig15_dppu_grouping": fig15_dppu_grouping.run,
+        "tab01_detection": tab01_detection.run,
+        "cluster_ffp": cluster_ffp.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    results = {name: run_module(name, fn, args.quick) for name, fn in modules.items()}
+    n_claims = sum(len(r.get("claims", [])) for r in results.values())
+    n_fail = sum(
+        1 for r in results.values() for cl in r.get("claims", []) if not cl["ok"]
+    )
+    print(f"\n[bench] {len(results)} modules, {n_claims} claims, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Reliability sweep (paper Figs. 10/11 in one table):
+
+    PYTHONPATH=src python examples/reliability_sweep.py [--model clustered]
+"""
+import argparse
+
+from repro.core.redundancy import DPPUConfig
+from repro.core.reliability import sweep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="random", choices=["random", "clustered"])
+    ap.add_argument("--n", type=int, default=1500)
+    args = ap.parse_args()
+
+    pers = [0.005, 0.01, 0.02, 0.03, 0.04, 0.06]
+    res = sweep(("RR", "CR", "DR", "HyCA"), pers, fault_model=args.model,
+                n_configs=args.n, dppu=DPPUConfig(size=32))
+    ffp, power = {}, {}
+    for r in res:
+        ffp.setdefault(r.scheme, {})[r.per] = r.fully_functional_prob
+        power.setdefault(r.scheme, {})[r.per] = r.remaining_power
+
+    print(f"fault model: {args.model}   (32x32 array, 32 spares / DPPU32)\n")
+    hdr = "PER     " + "".join(f"{p:>8.1%}" for p in pers)
+    print("fully-functional probability")
+    print(hdr)
+    for s in ("RR", "CR", "DR", "HyCA"):
+        print(f"{s:8s}" + "".join(f"{ffp[s][p]:8.2f}" for p in pers))
+    print("\nnormalized remaining computing power")
+    print(hdr)
+    for s in ("RR", "CR", "DR", "HyCA"):
+        print(f"{s:8s}" + "".join(f"{power[s][p]:8.2f}" for p in pers))
+
+
+if __name__ == "__main__":
+    main()

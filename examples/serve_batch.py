@@ -1,0 +1,9 @@
+"""Batched serving example: greedy decode a batch of requests through any
+assigned architecture's (reduced) config with a sharded KV cache.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch starcoder2-3b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input builders.
+
+Four LM shape cells (seq_len × global_batch):
+  train_4k     — training step, seq 4 096, batch 256
+  prefill_32k  — inference prefill (forward), seq 32 768, batch 32
+  decode_32k   — one-token decode against a 32 768 KV cache, batch 128
+  long_500k    — one-token decode against a 524 288 cache, batch 1
+                 (sub-quadratic archs only — mandated skip otherwise)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no allocation)
+for every model input of a (config × cell) pair; ``input_shardings`` the
+matching PartitionSpecs for a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import cache_specs, resolve_spec
+from repro.models.lm import LMConfig, init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: LMConfig, cell: ShapeCell) -> bool:
+    """long_500k needs sub-quadratic sequence mixing (mandated skip)."""
+    if cell.name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def applicable_cells(cfg: LMConfig) -> list[ShapeCell]:
+    return [c for c in SHAPES.values() if applicable(cfg, c)]
+
+
+def _frontend_inputs(cfg: LMConfig, b: int) -> dict:
+    if cfg.family == "encdec":
+        return {"frames": SDS((b, cfg.enc_len, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "vlm":
+        return {"patches": SDS((b, cfg.n_patches, cfg.d_vision), jnp.bfloat16)}
+    return {}
+
+
+def input_specs(cfg: LMConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        return {
+            "tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32),
+            **_frontend_inputs(cfg, b),
+        }
+    if cell.kind == "prefill":
+        return {"tokens": SDS((b, s), jnp.int32), **_frontend_inputs(cfg, b)}
+    if cell.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+        return {"token": SDS((b, 1), jnp.int32), "cache": cache}
+    raise ValueError(cell.kind)
+
+
+def input_shardings(cfg: LMConfig, cell: ShapeCell, mesh: Mesh) -> dict:
+    """PartitionSpec tree matching :func:`input_specs` (batch over data axes,
+    KV caches per dist.sharding.cache_specs)."""
+    specs = input_specs(cfg, cell)
+    out: dict = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_specs(v, mesh)
+        else:
+            logical = ["batch"] + [None] * (len(v.shape) - 1)
+            out[k] = resolve_spec(logical, v.shape, mesh)
+    return out

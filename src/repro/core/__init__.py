@@ -1,0 +1,24 @@
+"""HyCA core — the paper's contribution as a composable JAX module.
+
+Layers:
+  * fault_models  — BER/PER conversion, random + clustered fault maps
+  * redundancy    — RR/CR/DR baselines + HyCA repair & degradation algorithms
+  * array_sim     — cycle-level output-stationary array + DPPU timing model
+  * reliability   — Monte-Carlo FFP / remaining-computing-power harness
+  * detection     — runtime scan fault detection (CLB model)
+  * area          — component-count chip-area model
+  * perf_model    — Scale-sim-like network runtime model + CNN layer tables
+  * engine        — HyCAEngine: fault-tolerant matmul for LM layers
+"""
+from repro.core.engine import FaultState, HyCAConfig, fault_state_from_map, hyca_matmul
+from repro.core.redundancy import DPPUConfig, SCHEMES, repair
+
+__all__ = [
+    "FaultState",
+    "HyCAConfig",
+    "fault_state_from_map",
+    "hyca_matmul",
+    "DPPUConfig",
+    "SCHEMES",
+    "repair",
+]

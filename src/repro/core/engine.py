@@ -1,0 +1,181 @@
+"""HyCAEngine — the paper's architecture as a fault-tolerant matmul executor.
+
+Data semantics of Section IV (the timing semantics live in ``array_sim``):
+
+  * The matmul's output matrix is mapped onto the virtual rows×cols PE array
+    output-stationary: out[i, j] belongs to PE(i % rows, j % cols)  — row index
+    ↔ spatial position, column index ↔ output channel, exactly the paper's
+    mapping ("PEs in the same column calculate different output features in
+    the same output channel").
+  * Faulty PEs corrupt every output element mapped to them (stuck-at faults on
+    the PE's accumulator register).
+  * The DPPU recomputes the outputs of up to ``capacity`` faulty PEs
+    (leftmost-first priority) and overwrites them in the output buffer.
+  * Unrepaired faults degrade the array: their columns (and everything to the
+    right — buffer connectivity) are discarded; the engine returns outputs for
+    the surviving column prefix only, mirroring the column-discard strategy.
+
+Modes:
+  * ``off``       — plain matmul (production path; what the dry-run lowers).
+  * ``protected`` — faults injected AND repaired; bit-exact with ``off`` while
+    #faults ≤ capacity (the paper's headline claim — property-tested).
+  * ``unprotected`` — faults injected, no DPPU (the Fig. 2 accuracy collapse).
+
+The engine is dtype-generic: the int32-accumulator stuck-at model is exact for
+the int8 path (the paper's datapath); for float dtypes the stuck-at is applied
+to the bit pattern of the float32 accumulation result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.redundancy import DPPUConfig, effective_capacity
+
+Mode = Literal["off", "protected", "unprotected"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HyCAConfig:
+    rows: int = 32
+    cols: int = 32
+    dppu: DPPUConfig = dataclasses.field(default_factory=lambda: DPPUConfig(size=32))
+    mode: Mode = "off"
+
+    @property
+    def capacity(self) -> int:
+        return min(self.dppu.size, effective_capacity(self.dppu, self.cols))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FaultState:
+    """Device-resident fault PE table (FPT) + stuck-at signatures.
+
+    ``fpt``: (max_faults, 2) int32 — (row, col) of faulty PEs, padded with -1.
+    ``stuck_bit`` / ``stuck_val``: per-entry stuck-at accumulator faults.
+    Construct via :func:`fault_state_from_map`.
+    """
+
+    fpt: jax.Array
+    stuck_bit: jax.Array
+    stuck_val: jax.Array
+
+    def tree_flatten(self):
+        return (self.fpt, self.stuck_bit, self.stuck_val), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def max_faults(self) -> int:
+        return self.fpt.shape[0]
+
+
+def fault_state_from_map(
+    fault_map: np.ndarray,
+    *,
+    max_faults: int | None = None,
+    rng: np.random.Generator | None = None,
+) -> FaultState:
+    rng = rng or np.random.default_rng(0)
+    rows, cols = np.nonzero(fault_map)
+    # leftmost-first repair priority (Section IV-B)
+    order = np.argsort(cols, kind="stable")
+    rows, cols = rows[order], cols[order]
+    n = rows.size
+    m = max_faults or max(n, 1)
+    fpt = np.full((m, 2), -1, dtype=np.int32)
+    fpt[:n, 0], fpt[:n, 1] = rows[:m], cols[:m]
+    bits = rng.integers(0, 32, size=m).astype(np.int32)
+    vals = rng.integers(0, 2, size=m).astype(np.int32)
+    return FaultState(jnp.asarray(fpt), jnp.asarray(bits), jnp.asarray(vals))
+
+
+def _stuck_at_i32(acc: jax.Array, bit: jax.Array, val: jax.Array) -> jax.Array:
+    mask = jnp.left_shift(jnp.int32(1), bit)
+    return jnp.where(val > 0, acc | mask, acc & ~mask)
+
+
+def _corrupt(out: jax.Array, pe_bit: jax.Array, pe_val: jax.Array, pe_faulty: jax.Array) -> jax.Array:
+    """Apply per-PE stuck-at faults to outputs mapped onto the PE grid.
+
+    ``out`` is (M, N); pe_* are (rows, cols) aligned via i%rows, j%cols.
+    int dtypes: exact stuck bit on the int32 accumulator.
+    float dtypes: stuck bit applied to the float32 bit pattern.
+    """
+    m, n = out.shape
+    rows, cols = pe_bit.shape
+    bi = pe_bit[jnp.arange(m)[:, None] % rows, jnp.arange(n)[None, :] % cols]
+    vi = pe_val[jnp.arange(m)[:, None] % rows, jnp.arange(n)[None, :] % cols]
+    fi = pe_faulty[jnp.arange(m)[:, None] % rows, jnp.arange(n)[None, :] % cols]
+    if jnp.issubdtype(out.dtype, jnp.integer):
+        acc = out.astype(jnp.int32)
+        bad = _stuck_at_i32(acc, bi, vi)
+        return jnp.where(fi, bad, acc).astype(out.dtype)
+    raw = jax.lax.bitcast_convert_type(out.astype(jnp.float32), jnp.int32)
+    bad = jax.lax.bitcast_convert_type(_stuck_at_i32(raw, bi, vi), jnp.float32)
+    return jnp.where(fi, bad, out.astype(jnp.float32)).astype(out.dtype)
+
+
+def _pe_grids(state: FaultState, rows: int, cols: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter the FPT into dense (rows, cols) bit/val/faulty grids."""
+    bit = jnp.zeros((rows, cols), jnp.int32)
+    val = jnp.zeros((rows, cols), jnp.int32)
+    faulty = jnp.zeros((rows, cols), bool)
+    valid = state.fpt[:, 0] >= 0
+    r = jnp.where(valid, state.fpt[:, 0], 0)
+    c = jnp.where(valid, state.fpt[:, 1], 0)
+    bit = bit.at[r, c].set(jnp.where(valid, state.stuck_bit, bit[r, c]))
+    val = val.at[r, c].set(jnp.where(valid, state.stuck_val, val[r, c]))
+    faulty = faulty.at[r, c].set(jnp.where(valid, True, faulty[r, c]))
+    return bit, val, faulty
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_repair"))
+def hyca_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    state: FaultState | None,
+    *,
+    cfg: HyCAConfig,
+    n_repair: int | None = None,
+) -> jax.Array:
+    """x: (M, K) @ w: (K, N) through the HyCA-protected virtual array.
+
+    ``n_repair``: how many FPT entries the DPPU repairs (defaults to all
+    entries up to DPPU capacity; the FPT is already leftmost-sorted).
+    """
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32)
+    if cfg.mode == "off" or state is None:
+        return out
+    bit, val, faulty = _pe_grids(state, cfg.rows, cfg.cols)
+    corrupted = _corrupt(out, bit, val, faulty)
+    if cfg.mode == "unprotected":
+        return corrupted.astype(out.dtype)
+    # protected: DPPU recompute of the first n_repair FPT entries.
+    k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults)
+    repaired_mask = jnp.zeros((cfg.rows, cfg.cols), bool)
+    valid = state.fpt[:k, 0] >= 0
+    r = jnp.where(valid, state.fpt[:k, 0], 0)
+    c = jnp.where(valid, state.fpt[:k, 1], 0)
+    repaired_mask = repaired_mask.at[r, c].set(valid)
+    m, n = out.shape
+    ri = repaired_mask[jnp.arange(m)[:, None] % cfg.rows, jnp.arange(n)[None, :] % cfg.cols]
+    # DPPU overwrite: recomputed (correct) value wherever repaired.
+    return jnp.where(ri, out, corrupted).astype(out.dtype)
+
+
+def surviving_columns(state: FaultState, cfg: HyCAConfig) -> int:
+    """Column-prefix degradation when #faults > capacity (host-side helper)."""
+    fpt = np.asarray(state.fpt)
+    n = int((fpt[:, 0] >= 0).sum())
+    if n <= cfg.capacity:
+        return cfg.cols
+    return int(fpt[cfg.capacity, 1])

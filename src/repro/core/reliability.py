@@ -1,0 +1,112 @@
+"""Monte-Carlo reliability evaluation (paper Figs. 3, 10, 11, 14, 15).
+
+Metrics (Section V-C):
+  * fully functional probability (FFP) — P(the scheme repairs every fault),
+    the metric for mission-critical deployments;
+  * normalized remaining computing power — E[surviving columns] / columns,
+    the metric for degradable deployments (column-granular discard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import fault_models as fm
+from repro.core import redundancy as red
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilityResult:
+    scheme: str
+    per: float
+    fault_model: str
+    fully_functional_prob: float
+    remaining_power: float
+    n_configs: int
+
+
+def _spares_for(scheme: str, rows: int, cols: int) -> int:
+    if scheme == "RR":
+        return rows
+    if scheme == "CR":
+        return cols
+    if scheme == "DR":
+        n = min(rows, cols)
+        return n * (-(-max(rows, cols) // n))
+    return 0
+
+
+def evaluate_scheme(
+    scheme: str,
+    per: float,
+    *,
+    rows: int = 32,
+    cols: int = 32,
+    fault_model: str = "random",
+    n_configs: int = 2000,
+    dppu: red.DPPUConfig | None = None,
+    seed: int = 0,
+) -> ReliabilityResult:
+    rng = np.random.default_rng(seed)
+    maps = fm.sample_fault_maps(rng, n_configs, rows, cols, per, fault_model)  # type: ignore[arg-type]
+    ff = np.zeros(n_configs, dtype=bool)
+    surv = np.zeros(n_configs, dtype=np.float64)
+
+    if scheme == "HyCA":
+        cfg = dppu or red.DPPUConfig(size=cols)
+        lane_caps = red.dppu_capacity(rng, cfg, per, n_configs)
+        eff = red.effective_capacity(cfg, cols)
+        caps = np.minimum(lane_caps, eff)
+        for i in range(n_configs):
+            ff[i], sc = red.hyca_repair(maps[i], int(caps[i]))
+            surv[i] = sc
+    else:
+        n_sp = _spares_for(scheme, rows, cols)
+        spare_faults = rng.random((n_configs, n_sp)) < per
+        for i in range(n_configs):
+            ff[i], sc = red.repair(scheme, maps[i], spare_faulty=spare_faults[i])
+            surv[i] = sc
+
+    return ReliabilityResult(
+        scheme=scheme,
+        per=per,
+        fault_model=fault_model,
+        fully_functional_prob=float(ff.mean()),
+        remaining_power=float(surv.mean() / cols),
+        n_configs=n_configs,
+    )
+
+
+def sweep(
+    schemes: Sequence[str],
+    pers: Sequence[float],
+    *,
+    rows: int = 32,
+    cols: int = 32,
+    fault_model: str = "random",
+    n_configs: int = 2000,
+    dppu: red.DPPUConfig | None = None,
+    seed: int = 0,
+) -> list[ReliabilityResult]:
+    out = []
+    for s in schemes:
+        for p in pers:
+            out.append(
+                evaluate_scheme(
+                    s,
+                    p,
+                    rows=rows,
+                    cols=cols,
+                    fault_model=fault_model,
+                    n_configs=n_configs,
+                    dppu=dppu,
+                    seed=seed + hash((s, round(p * 1e6))) % 100000,
+                )
+            )
+    return out
+
+
+# default PER grid used by the paper's figures (BER 1e-7..1e-3 → PER 0..6%)
+PER_GRID = tuple(float(x) for x in fm.per_from_ber(np.geomspace(1e-7, 1e-3, 9)))

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Tile↔PE mapping shared by kernels and oracles: the (M, N) output is tiled
+(bm, bn); tile (ti, tj) is "executed by" virtual PE(ti % rows, tj % cols) —
+the output-stationary mapping of the paper at tile granularity (the paper's
+per-element mapping is the bm = bn = 1 special case).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _tile_grids(m: int, n: int, bm: int, bn: int, rows: int, cols: int):
+    ti = jnp.arange(m) // bm
+    tj = jnp.arange(n) // bn
+    return ti[:, None] % rows, tj[None, :] % cols
+
+
+def _stuck_at_i32(acc: jax.Array, bit: jax.Array, val: jax.Array) -> jax.Array:
+    mask = jnp.left_shift(jnp.int32(1), bit)
+    return jnp.where(val > 0, acc | mask, acc & ~mask)
+
+
+def corrupt_f32(out: jax.Array, bit: jax.Array, val: jax.Array, faulty: jax.Array) -> jax.Array:
+    """Stuck-at on the f32 accumulator bit pattern wherever ``faulty``."""
+    raw = jax.lax.bitcast_convert_type(out, jnp.int32)
+    bad = jax.lax.bitcast_convert_type(_stuck_at_i32(raw, bit, val), jnp.float32)
+    return jnp.where(faulty, bad, out)
+
+
+def os_array_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    pe_bit: jax.Array,
+    pe_val: jax.Array,
+    pe_faulty: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+) -> jax.Array:
+    """Faulty-array matmul oracle: out = x @ w with per-PE stuck-at faults."""
+    m, n = x.shape[0], w.shape[1]
+    rows, cols = pe_faulty.shape
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    gi, gj = _tile_grids(m, n, bm, bn, rows, cols)
+    return corrupt_f32(out, pe_bit[gi, gj], pe_val[gi, gj], pe_faulty[gi, gj])
+
+
+def dppu_recompute_ref(
+    x: jax.Array,
+    w: jax.Array,
+    corrupted: jax.Array,
+    fpt: jax.Array,  # (F, 2) tile coords (ti, tj), -1 padded
+    *,
+    bm: int,
+    bn: int,
+) -> jax.Array:
+    """DPPU oracle: recompute the output tiles named by the (tile-level) FPT
+    and overwrite them in ``corrupted``."""
+    out = corrupted
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    def body(i, out):
+        ti, tj = fpt[i, 0], fpt[i, 1]
+        valid = ti >= 0
+        ti_ = jnp.maximum(ti, 0)
+        tj_ = jnp.maximum(tj, 0)
+        xs = jax.lax.dynamic_slice(xf, (ti_ * bm, 0), (bm, x.shape[1]))
+        ws = jax.lax.dynamic_slice(wf, (0, tj_ * bn), (w.shape[0], bn))
+        tile = xs @ ws
+        cur = jax.lax.dynamic_slice(out, (ti_ * bm, tj_ * bn), (bm, bn))
+        new = jnp.where(valid, tile, cur)
+        return jax.lax.dynamic_update_slice(out, new, (ti_ * bm, tj_ * bn))
+
+    return jax.lax.fori_loop(0, fpt.shape[0], body, out)
+
+
+def ft_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    pe_bit: jax.Array,
+    pe_val: jax.Array,
+    pe_faulty: jax.Array,
+    pe_repaired: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+) -> jax.Array:
+    """Fused fault-tolerant matmul oracle: healthy/repaired tiles exact,
+    faulty-unrepaired tiles stuck-at-corrupted."""
+    m, n = x.shape[0], w.shape[1]
+    rows, cols = pe_faulty.shape
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    gi, gj = _tile_grids(m, n, bm, bn, rows, cols)
+    eff_faulty = pe_faulty & ~pe_repaired
+    return corrupt_f32(out, pe_bit[gi, gj], pe_val[gi, gj], eff_faulty[gi, gj])

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.  For every (architecture × input-shape × mesh) cell:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...).lower(**specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+
+must SUCCEED for the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh.
+Per-cell artifacts (FLOPs, bytes, collective schedule, wire bytes) are dumped
+to ``experiments/dryrun/*.json`` — §Roofline reads them.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh multi
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, applicable, input_shardings, input_specs
+from repro.launch.hlo_stats import collective_stats, op_histogram
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import TrainConfig, batch_specs, make_train_step, state_specs
+from repro.launch.serve import make_decode, make_prefill
+from repro.dist.sharding import named, use_mesh
+from repro.optim.adamw import adamw_init
+from repro.models.lm import init_cache, init_params
+
+
+def _eval_state_shapes(cfg):
+    params = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    opt = jax.eval_shape(lambda: adamw_init(params))
+    return {"params": params, "opt": opt}
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.2f} GiB" if b >= 2**30 else f"{b / 2**20:.2f} MiB"
+
+
+def _memory_summary(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, n_micro: int = 8, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if not applicable(cfg, cell):
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind, "status": "skipped"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "n_devices": int(n_dev)}
+    t0 = time.perf_counter()
+    with use_mesh(mesh):
+        if cell.kind == "train":
+            tc = TrainConfig(n_micro=n_micro)
+            state_shapes = _eval_state_shapes(cfg)
+            bshapes = input_specs(cfg, cell)
+            fn, _, _ = make_train_step(cfg, tc, mesh, state_shapes, bshapes)
+            lowered = fn.lower(state_shapes, bshapes, None)
+        elif cell.kind == "prefill":
+            pshapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+            bshapes = input_specs(cfg, cell)
+            fn, _ = make_prefill(cfg, mesh, pshapes, bshapes)
+            lowered = fn.lower(pshapes, bshapes)
+        else:  # decode
+            pshapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+            ishapes = input_specs(cfg, cell)
+            cshapes = ishapes["cache"]
+            fn, _ = make_decode(cfg, mesh, pshapes, cshapes)
+            lowered = fn.lower(pshapes, cshapes, {"token": ishapes["token"]})
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
+
+    mem = _memory_summary(compiled)
+    cost = compiled.cost_analysis() or {}
+    rec["memory_analysis"] = mem
+    rec["cost_analysis"] = {
+        k: float(v)
+        for k, v in cost.items()
+        if isinstance(v, (int, float)) and k in ("flops", "bytes accessed", "transcendentals", "bytes accessed output", "optimal_seconds")
+    }
+    hlo = compiled.as_text()
+    cs = collective_stats(hlo, n_dev)
+    rec["collectives"] = {
+        "counts": cs.counts,
+        "result_bytes": cs.result_bytes,
+        "wire_bytes": cs.wire_bytes,
+        "total_wire_bytes": cs.total_wire_bytes,
+    }
+    rec["op_histogram"] = op_histogram(hlo)
+    rec["status"] = "ok"
+    if verbose:
+        print(f"  memory_analysis: { {k: _fmt_bytes(v) for k, v in mem.items()} }")
+        fl = rec["cost_analysis"].get("flops", 0)
+        ba = rec["cost_analysis"].get("bytes accessed", 0)
+        print(f"  cost_analysis: flops={fl:.3e} bytes={ba:.3e}")
+        print(f"  collectives: {cs.counts} wire={_fmt_bytes(int(cs.total_wire_bytes))}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--n-micro", type=int, default=8)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--stop-on-fail", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    results = []
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                tag = f"{arch}__{shape}__{mk}"
+                print(f"[dryrun] {tag}")
+                try:
+                    rec = run_cell(arch, shape, mk, n_micro=args.n_micro)
+                except Exception as e:
+                    failed += 1
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mk,
+                        "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                    }
+                    print(f"  FAILED: {rec['error']}")
+                    traceback.print_exc()
+                    if args.stop_on_fail:
+                        raise
+                if rec["status"] == "skipped":
+                    print("  skipped (long_500k needs sub-quadratic mixing)")
+                results.append(rec)
+                with open(os.path.join(args.out_dir, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    print(f"\n[dryrun] {ok} ok, {sk} skipped, {failed} failed / {len(results)} cells")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,125 @@
+"""Post-SPMD HLO statistics: collective bytes, op counts, remat duplication.
+
+``cost_analysis()`` has no collective term, so §Roofline's third term is
+derived here by parsing the compiled module text: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute result shape is
+sized, converted to *wire bytes per device* with the standard ring-algorithm
+factors, and aggregated per op kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# wire bytes per device for a ring implementation, as a multiple of the
+# RESULT size (g = group size):  AR moves 2·(g-1)/g · size,  AG (g-1)/g of the
+# result, RS (g-1)/g of the (larger) input ≈ (g-1)·result, A2A (g-1)/g,
+# permute exactly the result.
+def _wire_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)
+    if kind == "all-to-all":
+        return (g - 1) / g
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum over every dtype[dims] occurrence in a result-shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [n_groups, group_size]<=[...]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict     # per kind, result-shape bytes (per device)
+    wire_bytes: dict       # per kind, ring wire bytes (per device)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVES}
+    rbytes = {k: 0 for k in _COLLECTIVES}
+    wbytes = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match op name at the start of the RHS expression (after shape)
+            m = re.match(r"^\(?([\w\[\],:{} ]*?)\)?\s*" + kind + r"(-start|-done)?\(", rhs)
+            if not m:
+                continue
+            if m.group(2) == "-done":  # avoid double counting start/done pairs
+                break
+            shape_text = m.group(1) or lhs
+            b = _shape_bytes(shape_text)
+            g = _group_size(s, n_devices)
+            counts[kind] += 1
+            rbytes[kind] += b
+            wbytes[kind] += b * _wire_factor(kind, g)
+            break
+    return CollectiveStats(counts, rbytes, wbytes)
+
+
+def op_histogram(hlo_text: str, ops: tuple[str, ...] = ("fusion", "dot", "convolution", "scatter", "gather", "transpose", "reshape", "copy")) -> dict:
+    hist = {o: 0 for o in ops}
+    for line in hlo_text.splitlines():
+        for o in ops:
+            if re.search(rf"= \S+ {o}[\.\(]", line):
+                hist[o] += 1
+    return hist

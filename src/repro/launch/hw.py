@@ -1,0 +1,8 @@
+"""Target-hardware constants (TPU v5e) for the roofline analysis."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~)
+CHIPS_PER_POD = 256            # 16 x 16
+VMEM_BYTES = 128 * 2**20       # ~128 MiB VMEM per chip
+HBM_BYTES = 16 * 2**30         # 16 GiB HBM per chip

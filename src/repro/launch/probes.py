@@ -1,0 +1,263 @@
+import os
+if __name__ == "__main__":  # must run before jax locks the device count
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Trip-count-corrected HLO cost probes for the roofline analysis.
+
+XLA's ``cost_analysis`` tallies each while-loop body ONCE regardless of trip
+count (verified with a controlled scan-vs-unrolled experiment, see
+EXPERIMENTS.md §Roofline/Methodology), so production graphs — which scan over
+layers and microbatches — under-report FLOPs/bytes/collectives by the trip
+product.  The probes recover exact totals by lowering reduced-depth UNROLLED
+variants of the very same step functions and solving the linear system:
+
+    train:   cost(M, L) = U + M · (E + L · B)
+      f1 = cost(1, L1), f2 = cost(1, L2), f3 = cost(2, L1)
+      B = (f2 - f1) / (L2 - L1);  E = f3 - f1 - L1·B;  U = f1 - E - L1·B
+    serve:   cost(L) = E + L · B        (two probes)
+
+with B = per-layer cost, E = per-microbatch overhead (embed/logits/loss or
+decode head), U = per-step overhead (optimizer update, grad all-reduce).
+Everything (FLOPs, bytes accessed, collective wire bytes) goes through the
+same correction.  Probes use the production shardings on the production mesh,
+so the collective schedule per layer is the real one.
+"""
+import dataclasses
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.shapes import SHAPES, ShapeCell, applicable, input_specs
+from repro.dist.sharding import use_mesh
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.serve import make_decode, make_prefill
+from repro.launch.train import TrainConfig, make_train_step
+from repro.models.lm import LMConfig, init_cache, init_params
+from repro.optim.adamw import adamw_init
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float
+    bytes: float
+    wire: float
+    coll_counts: dict
+    wire_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def _merge(self, o, f):
+        kinds = set(self.wire_by_kind) | set(o.wire_by_kind)
+        return {k: f(self.wire_by_kind.get(k, 0.0), o.wire_by_kind.get(k, 0.0)) for k in kinds}
+
+    def __sub__(self, o):
+        return Cost(self.flops - o.flops, self.bytes - o.bytes, self.wire - o.wire,
+                    self.coll_counts, self._merge(o, lambda a, b: a - b))
+
+    def scale(self, k):
+        return Cost(self.flops * k, self.bytes * k, self.wire * k, self.coll_counts,
+                    {n: v * k for n, v in self.wire_by_kind.items()})
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.bytes + o.bytes, self.wire + o.wire,
+                    self.coll_counts, self._merge(o, lambda a, b: a + b))
+
+    def asdict(self):
+        return {"flops": self.flops, "bytes": self.bytes, "wire_bytes": self.wire,
+                "wire_by_kind": self.wire_by_kind}
+
+
+def _cost_of(compiled, n_dev: int) -> Cost:
+    ca = compiled.cost_analysis() or {}
+    cs = collective_stats(compiled.as_text(), n_dev)
+    return Cost(
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        float(cs.total_wire_bytes),
+        cs.counts,
+        dict(cs.wire_bytes),
+    )
+
+
+def _probe_cfg(cfg: LMConfig, n_layers: int) -> LMConfig:
+    kw: dict = {"n_layers": n_layers, "unroll": True}
+    if cfg.family == "moe" and cfg.first_k_dense:
+        kw["first_k_dense"] = 1  # keep the dense stem inside E
+    return dataclasses.replace(cfg, **kw)
+
+
+def _probe_layers(cfg: LMConfig) -> tuple[int, int, float]:
+    """(L1, L2, effective_full_L) — hybrid archs scale in shared-attn groups."""
+    if cfg.family == "hybrid":
+        ae = cfg.attn_every
+        return ae, 2 * ae, cfg.n_layers / ae  # cost unit = one group
+    if cfg.family == "moe" and cfg.first_k_dense:
+        k = cfg.first_k_dense
+        return k + 1, k + 2, cfg.n_layers - k
+    if cfg.family == "encdec":
+        return 1, 2, cfg.n_layers  # encoder (fixed depth) lands in E
+    return 1, 2, cfg.n_layers
+
+
+def _lower_train(cfg, mesh, cell: ShapeCell, n_micro: int, *, cast_once=False, profile="tp", hyca=False):
+    tc = TrainConfig(n_micro=n_micro, unroll_micro=True, cast_once=cast_once,
+                     hyca_mode="protected" if hyca else "off")
+    params = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    state_shapes = {"params": params, "opt": jax.eval_shape(lambda: adamw_init(params))}
+    bshapes = input_specs(cfg, cell)
+    hyca_cfg = fshapes = None
+    if hyca:
+        import jax.numpy as jnp
+        from repro.core.engine import FaultState, HyCAConfig
+        hyca_cfg = HyCAConfig(mode="protected")
+        fshapes = FaultState(
+            jax.ShapeDtypeStruct((32, 2), jnp.int32),
+            jax.ShapeDtypeStruct((32,), jnp.int32),
+            jax.ShapeDtypeStruct((32,), jnp.int32),
+        )
+    fn, _, _ = make_train_step(cfg, tc, mesh, state_shapes, bshapes, profile=profile, hyca=hyca_cfg)
+    return fn.lower(state_shapes, bshapes, fshapes).compile()
+
+
+def _serve_params(cfg, serve_bf16: bool):
+    import jax.numpy as jnp
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    if not serve_bf16:
+        return shapes
+    # §Perf: serving weights stored bf16 — halves every weight read
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s,
+        shapes,
+    )
+
+
+def _lower_prefill(cfg, mesh, cell: ShapeCell, *, serve_bf16=False):
+    pshapes = _serve_params(cfg, serve_bf16)
+    bshapes = input_specs(cfg, cell)
+    fn, _ = make_prefill(cfg, mesh, pshapes, bshapes)
+    return fn.lower(pshapes, bshapes).compile()
+
+
+def _lower_decode(cfg, mesh, cell: ShapeCell, *, serve_bf16=False):
+    pshapes = _serve_params(cfg, serve_bf16)
+    cshapes = jax.eval_shape(lambda: init_cache(cfg, cell.global_batch, cell.seq_len))
+    ishapes = input_specs(cfg, cell)
+    fn, _ = make_decode(cfg, mesh, pshapes, cshapes)
+    return fn.lower(pshapes, cshapes, {"token": ishapes["token"]}).compile()
+
+
+def probe_cell(
+    arch_cfg: LMConfig,
+    cell: ShapeCell,
+    mesh,
+    *,
+    n_micro_full: int = 8,
+    cast_once: bool = False,
+    profile: str = "tp",
+    serve_bf16: bool = False,
+    hyca: bool = False,
+) -> dict:
+    """Returns corrected per-step totals for one (arch × shape) cell."""
+    n_dev = int(mesh.devices.size)
+    L1, L2, L_full = _probe_layers(arch_cfg)
+    with use_mesh(mesh):
+        if cell.kind == "train":
+            # hold the MICROBATCH size fixed at the production value
+            # (global_batch / n_micro) and vary (n_micro, L) around it
+            mb = cell.global_batch // n_micro_full
+            cell1 = dataclasses.replace(cell, global_batch=mb)
+            cell3 = dataclasses.replace(cell, global_batch=2 * mb)
+            kw = dict(cast_once=cast_once, profile=profile, hyca=hyca)
+            c1 = _cost_of(_lower_train(_probe_cfg(arch_cfg, L1), mesh, cell1, 1, **kw), n_dev)
+            c2 = _cost_of(_lower_train(_probe_cfg(arch_cfg, L2), mesh, cell1, 1, **kw), n_dev)
+            c3 = _cost_of(_lower_train(_probe_cfg(arch_cfg, L1), mesh, cell3, 2, **kw), n_dev)
+            B = (c2 - c1).scale(1.0 / (L2 - L1))   # per-layer per-micro fwd+bwd
+            P = c3 - c1                            # per-microbatch cost at L1
+            U = c1 - P                             # per-step overhead (optimizer)
+            total = U + (P + B.scale(L_full - L1)).scale(n_micro_full)
+        else:
+            lower = _lower_prefill if cell.kind == "prefill" else _lower_decode
+            c1 = _cost_of(lower(_probe_cfg(arch_cfg, L1), mesh, cell, serve_bf16=serve_bf16), n_dev)
+            c2 = _cost_of(lower(_probe_cfg(arch_cfg, L2), mesh, cell, serve_bf16=serve_bf16), n_dev)
+            B = (c2 - c1).scale(1.0 / (L2 - L1))
+            E = c1 - B.scale(L1)
+            total = E + B.scale(L_full)
+            U = Cost(0, 0, 0, {})
+    return {
+        "per_layer": B.asdict(),
+        "per_micro_overhead": (P.asdict() if cell.kind == "train" else E.asdict()),
+        "per_step_overhead": U.asdict(),
+        "total": total.asdict(),
+        "probe_layers": [L1, L2],
+        "effective_layers": L_full,
+        "n_micro": n_micro_full if cell.kind == "train" else 1,
+        "collective_counts_probe": c2.coll_counts,
+    }
+
+
+def main(argv=None):
+    import argparse
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    from repro.configs import ARCH_IDS, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out-dir", default="experiments/probes")
+    ap.add_argument("--cast-once", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=8)
+    ap.add_argument("--loss-chunks", type=int, default=0)
+    ap.add_argument("--profile", default="tp", choices=["tp", "dp", "ep"])
+    ap.add_argument("--serve-bf16", action="store_true")
+    ap.add_argument("--hyca", action="store_true", help="protected-mode FFN matmuls")
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots", "off"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            cell = SHAPES[s]
+            if not applicable(cfg, cell):
+                continue
+            tag = f"{a}__{s}" + (f"__{args.tag}" if args.tag else "")
+            print(f"[probe] {tag}", flush=True)
+            try:
+                ccfg = cfg
+                if args.loss_chunks:
+                    import dataclasses as _dc
+                    ccfg = _dc.replace(ccfg, loss_chunks=args.loss_chunks)
+                if args.remat:
+                    import dataclasses as _dc
+                    if args.remat == "off":
+                        ccfg = _dc.replace(ccfg, remat=False)
+                    else:
+                        ccfg = _dc.replace(ccfg, remat_policy=args.remat)
+                rec = probe_cell(
+                    ccfg, cell, mesh, cast_once=args.cast_once,
+                    profile=args.profile, serve_bf16=args.serve_bf16,
+                    n_micro_full=args.n_micro, hyca=args.hyca,
+                )
+                rec.update({
+                    "arch": a, "shape": s, "status": "ok",
+                    "opts": {"cast_once": args.cast_once, "profile": args.profile,
+                             "serve_bf16": args.serve_bf16, "remat": args.remat},
+                })
+            except Exception as e:
+                import traceback; traceback.print_exc()
+                rec = {"arch": a, "shape": s, "status": "FAILED", "error": str(e)[:500]}
+            with open(os.path.join(args.out_dir, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] == "ok":
+                t = rec["total"]
+                print(f"  total flops={t['flops']:.3e} bytes={t['bytes']:.3e} wire={t['wire_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

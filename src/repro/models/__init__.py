@@ -1,0 +1,1 @@
+from repro.models.lm import LMConfig, decode_step, forward, init_cache, init_params, loss_fn  # noqa: F401

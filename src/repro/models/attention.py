@@ -1,0 +1,263 @@
+"""Attention variants: GQA (covers MHA), MLA (MiniCPM3/DeepSeek style), with
+blockwise (flash-style) training attention and KV-cache decode steps.
+
+Blockwise attention scans over query blocks so the (S × S) score matrix is
+never materialised — required for the prefill_32k shape cells to fit HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard as _shard
+from repro.models.layers import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init, scan_or_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    q_block: int = 512
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+# --------------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------------- #
+def gqa_init(key, cfg: AttnConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    hd = cfg.hd
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv * hd),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv * hd,), jnp.float32)
+    return p
+
+
+def _qkv(x, p, cfg: AttnConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv, hd)
+    v = v.reshape(b, s, cfg.n_kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped_scores(qb, k, scale):
+    """qb: (B,qb,Hk,G,D), k: (B,S,Hk,D) -> (B,qb,Hk,G,S) fp32."""
+    return jnp.einsum(
+        "bqhgd,bshd->bqhgs", qb.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+
+
+def blockwise_causal_attention(q, k, v, n_kv: int, q_block: int, unroll: bool = False) -> jax.Array:
+    """q: (B,S,Hq,D); k, v: (B,S,Hk,D); returns (B,S,Hq,D).
+
+    Scans query blocks; each block sees the full K/V panel with a causal mask
+    (peak score memory B·qb·Hq·S instead of B·S·Hq·S).
+    """
+    b, s, hq, d = q.shape
+    g = hq // n_kv
+    scale = 1.0 / (d ** 0.5)
+    qb = min(q_block, s)
+    assert s % qb == 0, (s, qb)
+    nblk = s // qb
+    qr = q.reshape(b, nblk, qb, n_kv, g, d)
+    kpos = jnp.arange(s)
+
+    def body(carry, inp):
+        blk_idx, qblk = inp
+        qpos = blk_idx * qb + jnp.arange(qb)
+        sc = _grouped_scores(qblk, k, scale)  # (B,qb,Hk,G,S)
+        mask = kpos[None, :] <= qpos[:, None]  # (qb, S)
+        sc = jnp.where(mask[None, :, None, None, :], sc, -1e30)
+        wts = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bqhgs,bshd->bqhgd", wts, v.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    _, outs = scan_or_unroll(body, None, (jnp.arange(nblk), qr.swapaxes(0, 1)), unroll)
+    return outs.swapaxes(0, 1).reshape(b, s, hq, d)
+
+
+def gqa_forward(x, p, cfg: AttnConfig, positions=None, unroll: bool = False) -> jax.Array:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(x, p, cfg, positions)
+    out = blockwise_causal_attention(q, k, v, cfg.n_kv, cfg.q_block, unroll)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+    return _shard(out, "batch", "seq", "embed")  # bf16 reshard point (§Perf)
+
+
+def gqa_decode(x, p, cfg: AttnConfig, cache: Params) -> tuple[jax.Array, Params]:
+    """One-token decode. x: (B,1,d); cache: {k,v: (B,Smax,Hk,D), idx: (B,)}."""
+    b = x.shape[0]
+    idx = cache["idx"]  # (B,) current length
+    q, k_new, v_new = _qkv(x, p, cfg, idx[:, None])
+    bidx = jnp.arange(b)
+    k_cache = cache["k"].at[bidx, idx].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, idx].set(v_new[:, 0].astype(cache["v"].dtype))
+    smax = k_cache.shape[1]
+    g = cfg.n_heads // cfg.n_kv
+    scale = 1.0 / (cfg.hd ** 0.5)
+    qh = q.reshape(b, 1, cfg.n_kv, g, cfg.hd)
+    sc = _grouped_scores(qh, k_cache, scale)[:, 0]  # (B,Hk,G,S)
+    valid = jnp.arange(smax)[None, :] <= idx[:, None]  # (B,S)
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    wts = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", wts, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd).astype(x.dtype)
+    new_cache = {"k": k_cache, "v": v_cache, "idx": idx + 1}
+    return out @ p["wo"], new_cache
+
+
+def gqa_cache_init(cfg: AttnConfig, batch: int, smax: int, dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jnp.zeros((batch, smax, cfg.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((batch, smax, cfg.n_kv, cfg.hd), dtype),
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 768
+    kv_lora: int = 256
+    d_nope: int = 64
+    d_rope: int = 32
+    d_v: int = 64
+    rope_theta: float = 10000.0
+    q_block: int = 512
+
+
+def mla_init(key, cfg: MLAConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    h, dn, dr, dv = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, cfg.q_lora),
+        "q_norm": rmsnorm_init(cfg.q_lora),
+        "wq_b": dense_init(ks[1], cfg.q_lora, h * (dn + dr)),
+        "wkv_a": dense_init(ks[2], cfg.d_model, cfg.kv_lora + dr),
+        "kv_norm": rmsnorm_init(cfg.kv_lora),
+        "wkv_b": dense_init(ks[3], cfg.kv_lora, h * (dn + dv)),
+        "wo": dense_init(ks[4], h * dv, cfg.d_model),
+    }
+
+
+def _mla_qkr(x, p, cfg: MLAConfig, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.d_nope, cfg.d_rope
+    q = rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv_a = x @ p["wkv_a"]
+    c_kv = rmsnorm(kv_a[..., : cfg.kv_lora], p["kv_norm"])  # (B,S,kv_lora)
+    k_rope = apply_rope(kv_a[..., cfg.kv_lora :][:, :, None, :], positions, cfg.rope_theta)[
+        :, :, 0
+    ]  # (B,S,dr) shared across heads
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(x, p, cfg: MLAConfig, positions=None, unroll: bool = False) -> jax.Array:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h, dn, dr, dv = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(x, p, cfg, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    qb = min(cfg.q_block, s)
+    assert s % qb == 0
+    nblk = s // qb
+    kpos = jnp.arange(s)
+
+    def body(carry, inp):
+        i, qn, qr = inp
+        qpos = i * qb + jnp.arange(qb)
+        sc = (
+            jnp.einsum("bqhd,bshd->bqhs", qn.astype(jnp.float32), k_nope.astype(jnp.float32))
+            + jnp.einsum("bqhd,bsd->bqhs", qr.astype(jnp.float32), k_rope.astype(jnp.float32))
+        ) * scale
+        mask = kpos[None, :] <= qpos[:, None]
+        sc = jnp.where(mask[None, :, None, :], sc, -1e30)
+        wts = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bqhs,bshd->bqhd", wts, v.astype(jnp.float32))
+        return carry, out.astype(x.dtype)
+
+    _, outs = scan_or_unroll(
+        body,
+        None,
+        (
+            jnp.arange(nblk),
+            q_nope.reshape(b, nblk, qb, h, dn).swapaxes(0, 1),
+            q_rope.reshape(b, nblk, qb, h, dr).swapaxes(0, 1),
+        ),
+        unroll,
+    )
+    out = outs.swapaxes(0, 1).reshape(b, s, h * dv)
+    return out @ p["wo"]
+
+
+def mla_cache_init(cfg: MLAConfig, batch: int, smax: int, dtype=jnp.bfloat16) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, smax, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, smax, cfg.d_rope), dtype),
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_decode(x, p, cfg: MLAConfig, cache: Params) -> tuple[jax.Array, Params]:
+    """Absorbed-matmul decode: attention runs in the compressed latent space so
+    the cache stays (kv_lora + d_rope) per token — MLA's whole point."""
+    b = x.shape[0]
+    idx = cache["idx"]
+    h, dn, dr, dv = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(x, p, cfg, idx[:, None])
+    bidx = jnp.arange(b)
+    c_cache = cache["c_kv"].at[bidx, idx].set(c_kv_new[:, 0].astype(cache["c_kv"].dtype))
+    r_cache = cache["k_rope"].at[bidx, idx].set(k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+    w_uk = p["wkv_b"].reshape(cfg.kv_lora, h, dn + dv)[..., :dn]  # (L,H,dn)
+    w_uv = p["wkv_b"].reshape(cfg.kv_lora, h, dn + dv)[..., dn:]  # (L,H,dv)
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32), w_uk)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    sc = (
+        jnp.einsum("bhl,bsl->bhs", q_abs, c_cache.astype(jnp.float32))
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32), r_cache.astype(jnp.float32))
+    ) * scale
+    smax = c_cache.shape[1]
+    valid = jnp.arange(smax)[None, :] <= idx[:, None]
+    sc = jnp.where(valid[:, None, :], sc, -1e30)
+    wts = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", wts, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhd->bhd", ctx, w_uv).reshape(b, 1, h * dv).astype(x.dtype)
+    return out @ p["wo"], {"c_kv": c_cache, "k_rope": r_cache, "idx": idx + 1}

@@ -1,0 +1,132 @@
+"""Encoder–decoder backbone (whisper-tiny): bidirectional encoder over
+precomputed audio-frame embeddings + causal decoder with cross-attention.
+
+Whisper details kept: pre-LN layernorm blocks, non-gated GELU FFNs, MHA
+(n_kv == n_heads), sinusoidal encoder positions.  Adaptation (DESIGN.md §2):
+decoder uses sinusoidal positions instead of a learned 448-entry table so the
+assigned stress shapes (seq 4k/32k) are well-defined.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig, gqa_cache_init, gqa_decode, gqa_init
+from repro.models.layers import (
+    Params,
+    dense_init,
+    ffn,
+    ffn_init,
+    layernorm,
+    layernorm_init,
+    sinusoidal_positions,
+    stack_layer_params,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossAttnConfig:
+    d_model: int
+    n_heads: int
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def cross_attn_init(key, cfg: CrossAttnConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wo": dense_init(ks[3], d, d),
+    }
+
+
+def cross_attn(x: jax.Array, enc: jax.Array, p: Params, cfg: CrossAttnConfig) -> jax.Array:
+    """x: (B, S, d) queries; enc: (B, T, d) encoder keys/values (no mask)."""
+    b, s, d = x.shape
+    t = enc.shape[1]
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (enc @ p["wk"]).reshape(b, t, h, hd)
+    v = (enc @ p["wv"]).reshape(b, t, h, hd)
+    sc = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    wts = jax.nn.softmax(sc / (hd**0.5), axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", wts, v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(b, s, d) @ p["wo"]
+
+
+def _self_attn_bidir(x: jax.Array, p: Params, cfg: AttnConfig) -> jax.Array:
+    """Full bidirectional MHA (encoder); no RoPE (whisper uses absolute pos)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, h, hd)
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    wts = jax.nn.softmax(sc / (hd**0.5), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", wts, v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# encoder
+# --------------------------------------------------------------------------- #
+def encoder_layer_init(key, d: int, n_heads: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layernorm_init(d),
+        "attn": gqa_init(k1, AttnConfig(d, n_heads, n_heads)),
+        "ln2": layernorm_init(d),
+        "ffn": ffn_init(k2, d, d_ff, gated=False),
+    }
+
+
+def encoder_init(key, n_layers: int, d: int, n_heads: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "layers": stack_layer_params(
+            lambda k: encoder_layer_init(k, d, n_heads, d_ff), k1, n_layers
+        ),
+        "ln_post": layernorm_init(d),
+    }
+
+
+def encoder_forward(frames: jax.Array, p: Params, d: int, n_heads: int, unroll: bool = False) -> jax.Array:
+    """frames: (B, T, d) precomputed mel-frame embeddings (frontend stub)."""
+    acfg = AttnConfig(d, n_heads, n_heads)
+    x = frames + sinusoidal_positions(frames.shape[1], d)[None].astype(frames.dtype)
+
+    def block(x, lp):
+        x = x + _self_attn_bidir(layernorm(x, lp["ln1"]), lp["attn"], acfg)
+        x = x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu)
+        return x, None
+
+    from repro.models.layers import scan_or_unroll
+    x, _ = scan_or_unroll(block, x, p["layers"], unroll)
+    return layernorm(x, p["ln_post"])
+
+
+# --------------------------------------------------------------------------- #
+# decoder layer (self + cross + ffn) — used by lm.py's encdec family
+# --------------------------------------------------------------------------- #
+def decoder_layer_init(key, d: int, n_heads: int, n_kv: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layernorm_init(d),
+        "attn": gqa_init(k1, AttnConfig(d, n_heads, n_kv)),
+        "ln_x": layernorm_init(d),
+        "xattn": cross_attn_init(k2, CrossAttnConfig(d, n_heads)),
+        "ln2": layernorm_init(d),
+        "ffn": ffn_init(k3, d, d_ff, gated=False),
+    }
+
+
+def decoder_cache_init(d: int, n_heads: int, n_kv: int, n_layers: int, batch: int, smax: int, dtype=jnp.bfloat16) -> Params:
+    one = gqa_cache_init(AttnConfig(d, n_heads, n_kv), batch, smax, dtype)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_layers, *x.shape)), one)

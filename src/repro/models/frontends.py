@@ -1,0 +1,48 @@
+"""Modality frontends — STUBS per the assignment spec.
+
+The [audio] / [vlm] entries specify the transformer *backbone* only; the
+frontend (whisper's conv1d+mel stack, llava's ViT + anyres tiling) is stubbed:
+``input_specs()`` supplies precomputed frame/patch embeddings.  What lives
+here is the part that belongs to the backbone proper:
+
+  * audio: sinusoidal position injection for precomputed mel-frame embeddings;
+  * vision: the multimodal projector (2-layer MLP, llava-style) mapping
+    precomputed ViT patch embeddings into the LM embedding space, and the
+    splice of projected patches into the token embedding sequence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, sinusoidal_positions
+
+
+def audio_frontend(frames: jax.Array) -> jax.Array:
+    """frames: (B, T_frames, d_model) precomputed conv-frontend output (stub).
+    Adds the fixed sinusoidal positions whisper applies post-conv."""
+    b, t, d = frames.shape
+    return frames + sinusoidal_positions(t, d)[None].astype(frames.dtype)
+
+
+def mm_projector_init(key, d_vision: int, d_model: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": dense_init(k1, d_vision, d_model),
+        "b1": jnp.zeros((d_model,), jnp.float32),
+        "fc2": dense_init(k2, d_model, d_model),
+        "b2": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def mm_project(patches: jax.Array, p: Params) -> jax.Array:
+    """patches: (B, N_patch, d_vision) -> (B, N_patch, d_model)."""
+    h = jax.nn.gelu(patches @ p["fc1"].astype(patches.dtype) + p["b1"].astype(patches.dtype))
+    return h @ p["fc2"].astype(patches.dtype) + p["b2"].astype(patches.dtype)
+
+
+def splice_patches(tok_emb: jax.Array, patch_emb: jax.Array) -> jax.Array:
+    """Overwrite the first N_patch positions of the token embedding sequence
+    with projected patch embeddings (llava-style prefix layout)."""
+    n = patch_emb.shape[1]
+    return jnp.concatenate([patch_emb.astype(tok_emb.dtype), tok_emb[:, n:]], axis=1)

@@ -1,0 +1,149 @@
+"""Mamba2 block (SSD — state-space duality), chunked matmul formulation.
+
+The chunked SSD form turns the selective-scan recurrence into blocked matmuls
+(intra-chunk attention-like term + inter-chunk state carry), which is exactly
+the TPU-native adaptation: MXU-aligned matmuls instead of a long sequential
+scan.  All decay exponentials are differences of a monotone cumsum, so every
+``exp`` argument is ≤ 0 — numerically stable at any chunk length.
+
+Used by zamba2-1.2b (hybrid Mamba2 + shared attention blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init, scan_or_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(key, cfg: Mamba2Config) -> Params:
+    ks = jax.random.split(key, 4)
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj emits [z, x, B, C, dt]
+    d_in_proj = 2 * di + 2 * n + h
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (h,))
+        * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+        + jnp.log(cfg.dt_min)
+    )
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj),
+        "out_proj": dense_init(ks[1], di, cfg.d_model),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse-softplus init
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg: Mamba2Config):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di : 2 * di]
+    B = zxbcdt[..., 2 * di : 2 * di + n]
+    C = zxbcdt[..., 2 * di + n : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, x, B, C, dt
+
+
+def ssd_chunked(x, dt, A_log, B, C, D, chunk: int, unroll: bool = False):
+    """x: (b,s,h,p); dt: (b,s,h); B,C: (b,s,n). Returns y: (b,s,h,p).
+
+    h_t = exp(dt_t a_h) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t·h_t + D x_t
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    a = -jnp.exp(A_log.astype(jnp.float32))  # (h,) negative
+    dA = dt.astype(jnp.float32) * a  # (b,s,h) ≤ 0
+    xr = x.reshape(b, nc, q, h, p).swapaxes(0, 1).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, q, h).swapaxes(0, 1).astype(jnp.float32)
+    dAr = dA.reshape(b, nc, q, h).swapaxes(0, 1)
+    Br = B.reshape(b, nc, q, n).swapaxes(0, 1).astype(jnp.float32)
+    Cr = C.reshape(b, nc, q, n).swapaxes(0, 1).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_fn(S_prev, inp):
+        # one chunk at a time keeps the (q, q, h) decay tensor transient
+        xc, dtc, dac, Bc, Cc = inp  # (b,q,...)
+        cums = jnp.cumsum(dac, axis=1)  # (b,q,h) monotone decreasing
+        # intra-chunk: L[i,j] = exp(cums_i - cums_j) for j<=i (args ≤ 0)
+        li = cums[:, :, None, :] - cums[:, None, :, :]  # (b,q,q,h)
+        L = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", Cc, Bc)  # (b,q,q)
+        w = cb[..., None] * L * dtc[:, None, :, :]  # weight j->i per head
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xc)
+        # inter-chunk: y_i += exp(cums_i) C_i · S_prev
+        y_inter = jnp.einsum("bih,bin,bhnp->bihp", jnp.exp(cums), Cc, S_prev)
+        # chunk-final state: S = dec·S_prev + Σ_j exp(cums_q - cums_j) dt_j B_j⊗x_j
+        decay_to_end = jnp.exp(cums[:, -1:, :] - cums)  # (b,q,h) ≤ 1
+        S_c = jnp.einsum("bjh,bjn,bjhp->bhnp", decay_to_end * dtc, Bc, xc)
+        S_new = S_prev * jnp.exp(cums[:, -1, :])[..., None, None] + S_c
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, ys = scan_or_unroll(chunk_fn, S0, (xr, dtr, dAr, Br, Cr), unroll)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return (y + D[None, None, :, None] * x.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba2_forward(x, p, cfg: Mamba2Config, unroll: bool = False) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    z, xs, B, C, dt = _split_in_proj(x @ p["in_proj"], cfg)
+    b, s, _ = x.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xs = xs.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    y = ssd_chunked(xs, dt, p["A_log"], B, C, p["D"], cfg.chunk, unroll)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
+    return y @ p["out_proj"]
+
+
+# --------------------------------------------------------------------------- #
+# decode: O(1) state update per token
+# --------------------------------------------------------------------------- #
+def mamba2_cache_init(cfg: Mamba2Config, batch: int, dtype=jnp.float32) -> Params:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), dtype)
+    }
+
+
+def mamba2_decode(x, p, cfg: Mamba2Config, cache: Params) -> tuple[jax.Array, Params]:
+    """x: (B,1,d). h = exp(dt a) h + dt B ⊗ x ; y = C·h + D x."""
+    b = x.shape[0]
+    z, xs, B, C, dt = _split_in_proj((x @ p["in_proj"])[:, 0], cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xs = xs.reshape(b, cfg.n_heads, cfg.head_dim).astype(jnp.float32)
+    S = cache["ssm"]
+    decay = jnp.exp(dt * a)[..., None, None]  # (b,h,1,1)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, B.astype(jnp.float32), xs)
+    S_new = S * decay + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), S_new)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)[:, None, :], p["norm"])
+    return y @ p["out_proj"], {"ssm": S_new}

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch, token-grouped.
+
+Dispatch/combine are einsums over a one-hot (…, tokens, experts, capacity)
+tensor so expert parallelism falls out of sharding the expert axis over the
+mesh "model" axis.  Two §Perf-critical layout decisions (both found by the
+roofline probes, see EXPERIMENTS.md):
+
+  * tokens are processed in GROUPS of ``group_size`` WITHIN each batch row —
+    the batch axis stays data-sharded and every device works on its local
+    tokens each group step.  (Grouping across the batch axis makes the scan
+    iterate a sharded dimension: GSPMD reshards every step — 4.9 GiB of
+    all-reduce per layer per microbatch.)  A naive ungrouped dispatch is
+    O(N²) in tokens — terabytes at prefill_32k.
+  * the k-slot axis is collapsed BEFORE the capacity one-hot, so the live
+    tensor is (…, N, E, C), never the top-k× larger (k, …, N, E, C).
+
+Experts whose count does not divide the model axis are PADDED (``pad_to``):
+the router logits of padded experts are masked to -inf, so they are never
+routed to; their weights exist only to make the expert axis shardable
+(granite-moe's 40 experts -> 48 = 3 per device on a 16-way axis).
+
+Covers both assigned MoE archs: deepseek-moe-16b (fine-grained: 64 routed
+top-6 + 2 shared experts) and granite-moe (40 routed top-8, no shared).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.layers import Params, dense_init, ffn, ffn_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_expert: int  # per-expert FFN hidden size
+    n_shared: int = 0
+    d_shared: int = 0  # shared-expert FFN hidden (fine-grained MoE)
+    capacity_factor: float = 1.25
+    group_size: int = 2048  # tokens per dispatch group (GShard group dim)
+    pad_to: int = 0         # pad expert count so it shards (0 = no padding)
+
+    @property
+    def n_padded(self) -> int:
+        return max(self.pad_to, self.n_experts)
+
+
+def moe_init(key, cfg: MoEConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_padded, cfg.d_model, cfg.d_expert
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.006),
+        "gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * 0.02,
+        "up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * 0.02,
+        "down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * 0.02,
+    }
+    if cfg.n_shared:
+        p["shared"] = ffn_init(ks[4], d, cfg.d_shared or cfg.d_expert * cfg.n_shared)
+    return p
+
+
+def _topk_dispatch(gates: jax.Array, top_k: int, capacity: int):
+    """gates: (B, G, E) probabilities. Returns dispatch (B, G, E, C) one-hot
+    and combine weights; capacity-dropped tokens get zero weight."""
+    b, g, e = gates.shape
+    topv, topi = jax.lax.top_k(gates, top_k)  # (B, G, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renormalise
+    onehot = jax.nn.one_hot(jnp.moveaxis(topi, -1, 0), e, dtype=jnp.float32)  # (k,B,G,E)
+    # queue position per token within its expert, counted across (slot, token)
+    flat = jnp.moveaxis(onehot, 0, 1).reshape(b, top_k * g, e)  # slot-major
+    pos = jnp.moveaxis(
+        jnp.cumsum(flat, axis=1).reshape(b, top_k, g, e), 1, 0
+    ) - 1.0  # (k, B, G, E)
+    keep = (pos < capacity) * onehot
+    # a token occupies at most one slot per expert -> collapse k first
+    pos_ne = (pos * onehot).sum(0)  # (B, G, E)
+    keep_ne = keep.sum(0)           # (B, G, E)
+    gate_ne = jnp.einsum("bgk,kbge->bge", topv, onehot)
+    dispatch = keep_ne[..., None] * jax.nn.one_hot(
+        pos_ne.astype(jnp.int32), capacity, dtype=jnp.float32
+    )  # (B, G, E, C)
+    combine = dispatch * gate_ne[..., None]
+    return dispatch, combine
+
+
+def _group_forward(xg: jax.Array, p: Params, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """xg: (B, G, d) one token group per batch row. Returns (out, aux)."""
+    b, g, d = xg.shape
+    logits = (xg @ p["router"]).astype(jnp.float32)  # (B, G, E_pad)
+    if cfg.n_padded != cfg.n_experts:  # mask padded experts out of routing
+        dead = jnp.arange(cfg.n_padded) >= cfg.n_experts
+        logits = jnp.where(dead, -1e30, logits)
+    gates = jax.nn.softmax(logits, axis=-1)
+    capacity = max(1, int(cfg.capacity_factor * cfg.top_k * g / cfg.n_experts))
+    dispatch, combine = _topk_dispatch(gates, cfg.top_k, capacity)
+    xe = jnp.einsum("bgec,bgd->becd", dispatch.astype(xg.dtype), xg)  # (B,E,C,d)
+    xe = shard(xe, "batch", "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["gate"].astype(xg.dtype)))
+    h = h * jnp.einsum("becd,edf->becf", xe, p["up"].astype(xg.dtype))
+    ye = jnp.einsum("becf,efd->becd", h, p["down"].astype(xg.dtype))
+    out = jnp.einsum("bgec,becd->bgd", combine.astype(xg.dtype), ye)
+    # load-balancing aux loss (Switch-style), over real experts only
+    me = gates[..., : cfg.n_experts].mean((0, 1))
+    ce = dispatch[..., : cfg.n_experts, :].sum(-1).mean((0, 1))
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return out, aux
+
+
+def moe_forward(
+    x: jax.Array, p: Params, cfg: MoEConfig, *, unroll: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out, aux_loss).  Tokens stream through dispatch
+    groups of ``cfg.group_size`` within each batch row, so the batch axis
+    stays data-sharded through the group scan."""
+    b, s, d = x.shape
+    gsz = min(cfg.group_size, s)
+    if s % gsz:  # awkward sequence lengths: one group per row
+        gsz = s
+    n_groups = s // gsz
+
+    if n_groups == 1:
+        out, aux = _group_forward(x, p, cfg)
+        return out + _shared(x, p), aux
+
+    xg = jnp.moveaxis(x.reshape(b, n_groups, gsz, d), 1, 0)  # (n_g, B, G, d)
+
+    def body(carry, xgi):
+        out, aux = _group_forward(xgi, p, cfg)
+        return carry + aux, out
+
+    if unroll:
+        auxs = jnp.zeros((), jnp.float32)
+        outs = []
+        for i in range(n_groups):
+            auxs, o = body(auxs, xg[i])
+            outs.append(o)
+        aux_sum, ys = auxs, jnp.stack(outs)
+    else:
+        aux_sum, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xg)
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    return out + _shared(x, p), aux_sum / n_groups
+
+
+def _shared(x: jax.Array, p: Params) -> jax.Array:
+    return ffn(x, p["shared"]) if "shared" in p else jnp.zeros_like(x)

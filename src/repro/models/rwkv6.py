@@ -1,0 +1,200 @@
+"""RWKV6 ("Finch") block: linear attention with data-dependent per-channel
+decay, token-shift mixing, and a squared-ReLU channel-mix FFN.
+
+Sequence mixing runs in a chunked matmul form (GLA-style): within a chunk the
+decay products factorise as exp(ecw_i) · exp(-cumw_j); chunks are short enough
+(CHUNK=16) that with the decay floor LOGW_MIN the factors stay inside fp32
+range, and cross-chunk terms always use differences ≤ 0.  The O(1)-state
+recurrent form is used for decode and as the test oracle.
+
+Hardware-adaptation note (DESIGN.md §2/§4): the WKV recurrence is elementwise
+state evolution, not a matmul — HyCA's output-stationary array does not map to
+it; the surrounding projections are HyCA-protected instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init, scan_or_unroll
+
+CHUNK = 16
+LOGW_MIN = -4.0  # per-step log-decay floor; bounds exp(-cumw) ≤ e^64 in-chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    decay_lora: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv6_init(key, cfg: RWKV6Config) -> Params:
+    ks = jax.random.split(key, 12)
+    d = cfg.d_model
+    h, dk = cfg.n_heads, cfg.head_dim
+    return {
+        # time mixing
+        "mu": jax.random.uniform(ks[0], (5, d)),  # r,k,v,w,g shift mixes
+        "wr": dense_init(ks[1], d, d),
+        "wk": dense_init(ks[2], d, d),
+        "wv": dense_init(ks[3], d, d),
+        "wg": dense_init(ks[4], d, d),
+        "wo": dense_init(ks[5], d, d),
+        "w0": jnp.zeros((d,), jnp.float32) - 1.0,
+        "w_a": dense_init(ks[6], d, cfg.decay_lora, scale=0.01),
+        "w_b": dense_init(ks[7], cfg.decay_lora, d, scale=0.01),
+        "u": jax.random.normal(ks[8], (h, dk), jnp.float32) * 0.02,
+        "ln_x": rmsnorm_init(d),
+        "ln1": rmsnorm_init(d),
+        "ln2": rmsnorm_init(d),
+        # channel mixing
+        "mu_ff": jax.random.uniform(ks[9], (2, d)),
+        "ffk": dense_init(ks[10], d, cfg.d_ff),
+        "ffv": dense_init(ks[11], cfg.d_ff, d),
+        "ffr": dense_init(jax.random.fold_in(ks[11], 1), d, d),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array | None = None) -> jax.Array:
+    """x shifted right by one along S; x_prev (B, d) seeds position 0."""
+    pad = jnp.zeros_like(x[:, :1]) if x_prev is None else x_prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _rkvwg(x, xs, p, cfg: RWKV6Config):
+    mix = lambda i: x + (xs - x) * p["mu"][i]
+    r = mix(0) @ p["wr"]
+    k = mix(1) @ p["wk"]
+    v = mix(2) @ p["wv"]
+    logw = -jnp.exp(
+        p["w0"] + jnp.tanh((mix(3) @ p["w_a"]).astype(jnp.float32)) @ p["w_b"]
+    )
+    logw = jnp.maximum(logw, LOGW_MIN)
+    g = jax.nn.silu((mix(4) @ p["wg"]).astype(jnp.float32))
+    b, s, d = x.shape
+    h, dk = cfg.n_heads, cfg.head_dim
+    shp = (b, s, h, dk)
+    return (
+        r.reshape(shp).astype(jnp.float32),
+        k.reshape(shp).astype(jnp.float32),
+        v.reshape(shp).astype(jnp.float32),
+        logw.reshape(shp),
+        g,
+    )
+
+
+def wkv_chunked(r, k, v, logw, u, state=None, chunk: int = CHUNK, unroll: bool = False):
+    """r,k,v,logw: (b,s,h,dk); u: (h,dk). Returns (y, final_state).
+
+    State S: (b, h, dk, dv) with S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t and
+    y_t = rᵀ(S_{t-1} + diag(u) k_t ⊗ v_t).
+    """
+    b, s, h, dk = r.shape
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    resh = lambda t: t.reshape(b, nc, q, h, dk).swapaxes(0, 1)
+    rr, kr, vr, wr_ = map(resh, (r, k, v, logw))
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)  # strictly lower (j < i)
+
+    def chunk_fn(S_prev, inp):
+        rc, kc, vc, wc = inp  # (b,q,h,dk)
+        cumw = jnp.cumsum(wc, axis=1)  # inclusive, ≤ 0, decreasing
+        ecw = cumw - wc  # exclusive cumsum (ecw_0 = 0)
+        qd = rc * jnp.exp(ecw)  # ≤ |r|
+        kd = kc * jnp.exp(-cumw)  # ≤ |k|·e^{|LOGW_MIN|·q}
+        sc = jnp.einsum("bihd,bjhd->bhij", qd, kd)
+        sc = jnp.where(mask[None, None], sc, 0.0)
+        diag = jnp.einsum("bihd,hd,bihd->bhi", rc, u, kc)
+        y = jnp.einsum("bhij,bjhd->bihd", sc, vc) + diag.transpose(0, 2, 1)[..., None] * vc
+        y = y + jnp.einsum("bihd,bhde->bihe", rc * jnp.exp(ecw), S_prev)
+        dec_end = jnp.exp(cumw[:, -1:, :, :] - cumw)  # ≤ 1
+        S_new = S_prev * jnp.exp(cumw[:, -1])[..., None] + jnp.einsum(
+            "bjhd,bjhe->bhde", kc * dec_end, vc
+        )
+        return S_new, y
+
+    S0 = jnp.zeros((b, h, dk, dk), jnp.float32) if state is None else state
+    S_fin, ys = scan_or_unroll(chunk_fn, S0, (rr, kr, vr, wr_), unroll)
+    return ys.swapaxes(0, 1).reshape(b, s, h, dk), S_fin
+
+
+def wkv_recurrent(r, k, v, logw, u, state=None):
+    """Oracle / decode form: O(1)-state scan over time."""
+    b, s, h, dk = r.shape
+    S0 = jnp.zeros((b, h, dk, dk), jnp.float32) if state is None else state
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (b,h,dk)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        y = jnp.einsum("bhd,bhde->bhe", rt, S + u[None, :, :, None] * kv)
+        S_new = S * jnp.exp(wt)[..., None] + kv
+        return S_new, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, logw))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1), S_fin
+
+
+def rwkv6_time_mix(x, p, cfg: RWKV6Config, *, chunked: bool = True, unroll: bool = False):
+    xs = _token_shift(x)
+    r, k, v, logw, g = _rkvwg(x, xs, p, cfg)
+    if chunked:
+        y, _ = wkv_chunked(r, k, v, logw, p["u"], unroll=unroll)
+    else:
+        y, _ = wkv_recurrent(r, k, v, logw, p["u"])
+    b, s, _ = x.shape
+    y = rmsnorm(y.reshape(b, s, cfg.d_model), p["ln_x"])
+    return ((y * g).astype(x.dtype)) @ p["wo"]
+
+
+def rwkv6_channel_mix(x, p):
+    xs = _token_shift(x)
+    xk = x + (xs - x) * p["mu_ff"][0]
+    xr = x + (xs - x) * p["mu_ff"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ffk"]))
+    return jax.nn.sigmoid(xr @ p["ffr"]) * (kk @ p["ffv"])
+
+
+def rwkv6_forward(x, p, cfg: RWKV6Config, *, chunked: bool = True, unroll: bool = False):
+    x = x + rwkv6_time_mix(rmsnorm(x, p["ln1"]), p, cfg, chunked=chunked, unroll=unroll)
+    return x + rwkv6_channel_mix(rmsnorm(x, p["ln2"]), p)
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def rwkv6_cache_init(cfg: RWKV6Config, batch: int) -> Params:
+    d = cfg.d_model
+    return {
+        "S": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), jnp.float32),  # last token (time mix)
+        "x_cm": jnp.zeros((batch, d), jnp.float32),  # last token (channel mix)
+    }
+
+
+def rwkv6_decode(x, p, cfg: RWKV6Config, cache: Params):
+    """x: (B, 1, d)."""
+    xn = rmsnorm(x, p["ln1"])
+    xs = cache["x_tm"][:, None, :].astype(x.dtype)
+    r, k, v, logw, g = _rkvwg(xn, xs, p, cfg)
+    y, S_new = wkv_recurrent(r, k, v, logw, p["u"], cache["S"])
+    b = x.shape[0]
+    y = rmsnorm(y.reshape(b, 1, cfg.d_model), p["ln_x"])
+    x1 = x + ((y * g).astype(x.dtype)) @ p["wo"]
+    x1n = rmsnorm(x1, p["ln2"])
+    xs2 = cache["x_cm"][:, None, :].astype(x.dtype)
+    xk = x1n + (xs2 - x1n) * p["mu_ff"][0]
+    xr = x1n + (xs2 - x1n) * p["mu_ff"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ffk"]))
+    out = x1 + jax.nn.sigmoid(xr @ p["ffr"]) * (kk @ p["ffv"])
+    new_cache = {"S": S_new, "x_tm": xn[:, 0].astype(jnp.float32), "x_cm": x1n[:, 0].astype(jnp.float32)}
+    return out, new_cache

@@ -1,0 +1,57 @@
+"""Top-k gradient compression with error feedback (distributed-optimization
+trick for the 1000-node story: DP gradient all-reduces shrink by the keep
+ratio; the residual is fed back so convergence is preserved — Stich et al.).
+
+``compress`` keeps the top ``ratio`` fraction of entries per leaf (by
+magnitude), zeroing the rest into the error-feedback accumulator;
+``decompress`` is implicit (the kept entries stay in place) so the pipeline
+is semantics-preserving on any backend while the sparsity is what a
+bandwidth-limited interconnect would ship.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _topk_mask(x: jax.Array, k: int) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    if k >= flat.size:
+        return jnp.ones_like(x, bool)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.abs(x) >= thresh
+
+
+def compress(grads: Any, ef: Any, ratio: float) -> tuple[Any, Any, jax.Array]:
+    """Returns (sparse_grads, new_ef, kept_fraction).
+
+    sparse_grads has the same pytree/shapes as grads with (1-ratio) of entries
+    zeroed; new_ef carries the dropped mass forward.
+    """
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        k = max(1, int(ratio * acc.size))
+        mask = _topk_mask(acc, k)
+        sent = jnp.where(mask, acc, 0.0)
+        return sent.astype(g.dtype), acc - sent, mask.mean()
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    sparse = treedef.unflatten([o[0] for o in outs])
+    new_ef = treedef.unflatten([o[1] for o in outs])
+    kept = jnp.mean(jnp.stack([o[2] for o in outs]))
+    return sparse, new_ef, kept
+
+
+def compressed_bytes(grads: Any, ratio: float, value_bytes: int = 2, index_bytes: int = 4) -> int:
+    """Wire bytes for a top-k exchange (values + indices) vs dense."""
+    n = sum(g.size for g in jax.tree.leaves(grads))
+    k = int(ratio * n)
+    return k * (value_bytes + index_bytes)

@@ -1,0 +1,13 @@
+"""Learning-rate schedules (trace-safe: step may be a jax scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup to ``peak_lr`` then cosine decay to ``floor * peak_lr``."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(warmup, 1)
+    frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,3 @@
+from repro.runtime.elastic import ElasticPlan, plan_remesh  # noqa: F401
+from repro.runtime.straggler import StragglerMitigator  # noqa: F401
+from repro.runtime.online_verify import OnlineVerifier  # noqa: F401

@@ -1,0 +1,94 @@
+"""Online fault detection — the paper's Section IV-D lifted to LM matmuls.
+
+The paper reserves one DPPU group to re-execute a sliding window of S MACs
+for one scanned PE per cycle and compares AR == BAR + PR via a small checking
+list buffer.  The TPU-tile analogue implemented here:
+
+  * the protected matmul's output is tiled onto the virtual PE grid
+    (engine.py mapping: out[i, j] -> PE(i % rows, j % cols));
+  * each training/serving step, the verifier re-computes ONE PE's output
+    tile with an independent dot product (the "reserved DPPU group") and
+    compares against the array's result — a partial-result check: only a
+    ``window``-long slice of the contraction is recomputed, exactly the
+    paper's AR = BAR + PR identity over a window of S MACs;
+  * the scan coordinate rotates row-major, so the whole virtual array is
+    swept every rows*cols steps (paper: Row·Col + Col cycles);
+  * detected PEs are appended to the FaultState's FPT — the repair pipeline
+    picks them up on the next step.
+
+Float caveat (DESIGN.md §2): the int8 datapath compares exactly; the bf16/f32
+path uses a relative tolerance since recomputation reassociates the sum.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FaultState
+
+
+@dataclasses.dataclass
+class OnlineVerifier:
+    rows: int = 32
+    cols: int = 32
+    window: int = 8          # S — MACs recomputed per check (partial result)
+    rtol: float = 1e-3
+    step: int = 0
+
+    def coord(self, step: int | None = None) -> tuple[int, int]:
+        s = self.step if step is None else step
+        idx = s % (self.rows * self.cols)
+        return idx // self.cols, idx % self.cols
+
+    def check(self, x: jax.Array, w: jax.Array, out: jax.Array) -> tuple[bool, tuple[int, int]]:
+        """Re-verify the output element owned by the scanned PE.
+
+        x: (M, K), w: (K, N), out: (M, N) as produced by the (possibly faulty)
+        array.  Uses the first output element mapped to PE(r, c); the partial
+        check recomputes MACs [0, window) and compares against the array's
+        result restricted to the same window (BAR + PR identity).
+        """
+        r, c = self.coord()
+        self.step += 1
+        m, n = out.shape
+        if r >= m or c >= n:
+            return True, (r, c)
+        kwin = min(self.window, x.shape[1])
+        pr = jnp.dot(
+            x[r, :kwin].astype(jnp.float32), w[:kwin, c].astype(jnp.float32)
+        )
+        # BAR + PR: the array's value minus the tail contribution
+        tail = jnp.dot(
+            x[r, kwin:].astype(jnp.float32), w[kwin:, c].astype(jnp.float32)
+        )
+        ar = out[r, c].astype(jnp.float32)
+        expect = pr + tail
+        if jnp.issubdtype(out.dtype, jnp.integer):
+            ok = bool(ar == expect)
+        else:
+            ok = bool(
+                jnp.abs(ar - expect) <= self.rtol * (1.0 + jnp.abs(expect))
+            )
+        return ok, (r, c)
+
+    def scan_cycles(self) -> int:
+        """Paper Section IV-D: Row·Col + Col cycles for a full sweep."""
+        return self.rows * self.cols + self.cols
+
+
+def append_fault(state: FaultState, row: int, col: int) -> FaultState:
+    """FPT update on detection (host-side; next step's repair consumes it)."""
+    fpt = np.asarray(state.fpt).copy()
+    free = np.nonzero(fpt[:, 0] < 0)[0]
+    if free.size == 0:  # FPT full: grow (capacity exceeded -> degradation path)
+        fpt = np.concatenate([fpt, [[row, col]]]).astype(np.int32)
+        bits = np.concatenate([np.asarray(state.stuck_bit), [0]]).astype(np.int32)
+        vals = np.concatenate([np.asarray(state.stuck_val), [0]]).astype(np.int32)
+    else:
+        fpt[free[0]] = (row, col)
+        bits, vals = np.asarray(state.stuck_bit), np.asarray(state.stuck_val)
+    order = np.argsort(np.where(fpt[:, 0] >= 0, fpt[:, 1], 2**30), kind="stable")
+    return FaultState(jnp.asarray(fpt[order]), jnp.asarray(bits[order]), jnp.asarray(vals[order]))

@@ -1,0 +1,86 @@
+"""Cycle-level dataflow schedule invariants (paper Section IV-B, Fig. 5)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.array_sim import (
+    ArrayConfig,
+    ConvLayer,
+    dppu_recompute_cycles,
+    iteration_timeline,
+    layer_cycles,
+    recompute_keeps_up,
+    register_file_bytes,
+)
+
+
+def test_paper_register_file_sizes():
+    """Section V-A1: WRF = IRF = 2·32·32 = 2 KB; ORF = 64 B; FPT = 32×10 bits."""
+    rf = register_file_bytes(ArrayConfig(32, 32, 32, 8))
+    assert rf["WRF"] == 2048
+    assert rf["IRF"] == 2048
+    assert rf["ORF"] == 64
+    assert rf["FPT_bits"] == 32 * 10
+
+
+def test_delay_is_col():
+    assert ArrayConfig(32, 32).delay == 32
+    assert ArrayConfig(16, 64).delay == 64
+
+
+@given(
+    st.integers(1, 64),   # c (channels)
+    st.integers(1, 3),    # k
+    st.integers(0, 32),   # faults
+)
+@settings(max_examples=200, deadline=None)
+def test_no_output_port_conflicts(c, k, n_faults):
+    """While fault_PE_num + D + 2 <= T_iteration, the 2-D array's writes and
+    the DPPU's overwrites never contend for the output-buffer port."""
+    cfg = ArrayConfig(32, 32, 32, 8)
+    layer = ConvLayer(c_in=c * 32, k=k, out_pixels=64, c_out=64)  # T >= 32
+    tl = iteration_timeline(cfg, layer, n_faults)
+    if n_faults + cfg.delay + 2 <= tl.t_iteration:
+        assert tl.conflict_free
+        assert tl.idle >= 0
+        assert tl.array_write == (0, 32)
+
+
+def test_fig5_example_schedule():
+    """The paper's worked example: 32×32 array, 3 faults, c·k² iteration."""
+    cfg = ArrayConfig(32, 32, 32, 8)
+    layer = ConvLayer(c_in=256, k=3, out_pixels=1024, c_out=64)
+    tl = iteration_timeline(cfg, layer, 3)
+    assert tl.t_iteration == 256 * 9
+    assert tl.conflict_free
+    assert tl.dppu_write[1] - tl.dppu_write[0] == 3  # one overwrite/cycle
+
+
+@given(st.integers(0, 48))
+@settings(max_examples=100, deadline=None)
+def test_recompute_keeps_up_iff_capacity(n_faults):
+    """DPPU (32 lanes, groups of 8) finishes a D=32-cycle window's recompute
+    before the Ping-Pong swap iff #faults <= DPPU size."""
+    cfg = ArrayConfig(32, 32, 32, 8)
+    assert recompute_keeps_up(cfg, n_faults) == (n_faults <= 32)
+
+
+def test_dppu_recompute_cycles_grouped():
+    cfg = ArrayConfig(32, 32, 32, 8)  # 4 groups, 4 cycles per fault
+    assert dppu_recompute_cycles(cfg, 1) == 4
+    assert dppu_recompute_cycles(cfg, 4) == 4
+    assert dppu_recompute_cycles(cfg, 5) == 8
+    assert dppu_recompute_cycles(cfg, 32) == 32
+
+
+def test_layer_cycles_fc_single_column():
+    """FC layers use one column (paper Section V-D) — runtime ~independent of
+    cols."""
+    fc = ConvLayer(c_in=4096, k=1, out_pixels=1, c_out=4096)
+    c16 = layer_cycles(fc, 32, 16)
+    c32 = layer_cycles(fc, 32, 32)
+    assert c32 / c16 < 1.02  # only the wavefront term grows
+
+
+def test_layer_cycles_conv_scales():
+    conv = ConvLayer(c_in=256, k=3, out_pixels=1024, c_out=256)
+    assert layer_cycles(conv, 32, 32) < layer_cycles(conv, 32, 16)

@@ -1,0 +1,139 @@
+"""Checkpoint store + elastic/straggler runtime tests."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import CheckpointManager, latest_step, restore, save
+from repro.runtime.elastic import plan_remesh, spare_pool_ffp
+from repro.runtime.straggler import StragglerMitigator
+
+TREE = {"a": jnp.arange(6, dtype=jnp.float32), "n": {"b": jnp.ones((2, 3))}}
+
+
+def test_roundtrip(tmp_path):
+    save(str(tmp_path), 3, TREE)
+    out = restore(str(tmp_path), 3, TREE)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(6, dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(out["n"]["b"]), np.ones((2, 3)))
+
+
+def test_atomic_no_partial_visible(tmp_path):
+    save(str(tmp_path), 1, TREE)
+    # simulate a killed writer: stage a bogus tmp dir
+    os.makedirs(tmp_path / ".tmp-step_00000002")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_corrupt_manifest_ignored(tmp_path):
+    save(str(tmp_path), 1, TREE)
+    save(str(tmp_path), 2, TREE)
+    with open(tmp_path / "step_00000002" / "manifest.json", "w") as f:
+        f.write('{"step": 2, "leaves": [], "tree_hash": "wrong", "extra": {}}')
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path), 1, TREE)
+    bad = {"a": jnp.zeros((7,)), "n": {"b": jnp.ones((2, 3))}}
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), 1, bad)
+
+
+def test_manager_gc_and_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2)
+    for s in range(1, 6):
+        tree = {"a": jnp.full((3,), float(s)), "n": {"b": jnp.ones((2, 3))}}
+        mgr.maybe_save(s, tree)
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert steps == ["step_00000004", "step_00000005"]
+    like = {"a": jnp.zeros((3,)), "n": {"b": jnp.ones((2, 3))}}
+    step, out = mgr.resume(like)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full((3,), 5.0))
+
+
+# --------------------------------------------------------------------------- #
+# elastic re-mesh
+# --------------------------------------------------------------------------- #
+def test_plan_remesh_single_pod():
+    plan = plan_remesh((16, 16), ("data", "model"), [17], 256)
+    # device 17 = data row 1 -> that whole dp group is poisoned
+    assert plan.new_shape == (15, 16)
+    assert plan.dropped_groups == (1,)
+    assert plan.microbatch_per_group * 15 <= 256
+
+
+def test_plan_remesh_multi_pod_folds_pod_axis():
+    plan = plan_remesh((2, 16, 16), ("pod", "data", "model"), [0, 300], 256)
+    assert plan.degraded
+    assert plan.new_shape[0] == 1
+    assert plan.new_shape[1] == 30  # 32 groups - 2 poisoned
+
+
+def test_plan_remesh_no_failures_noop():
+    plan = plan_remesh((16, 16), ("data", "model"), [], 256)
+    assert not plan.degraded
+
+
+def test_plan_remesh_all_dead_raises():
+    with pytest.raises(RuntimeError):
+        plan_remesh((2, 2), ("data", "model"), [0, 1, 2, 3], 8)
+
+
+@given(st.lists(st.integers(0, 255), max_size=20, unique=True))
+@settings(max_examples=80, deadline=None)
+def test_plan_remesh_properties(failed):
+    if len(failed) >= 256:
+        return
+    try:
+        plan = plan_remesh((16, 16), ("data", "model"), failed, 256)
+    except RuntimeError:
+        # every group poisoned — only possible if failures span all 16 rows
+        assert len({f // 16 for f in failed}) == 16
+        return
+    assert 1 <= plan.new_shape[0] <= 16
+    assert plan.new_shape[0] == 16 - len(plan.dropped_groups)
+    # no failed device may sit in a surviving group
+    for f in failed:
+        assert f // 16 in plan.dropped_groups
+
+
+def test_spare_pool_dominates_region(rng):
+    pool = spare_pool_ffp(rng, 1024, 0.01, n_spares=32, policy="pool", n_trials=1500)
+    region = spare_pool_ffp(rng, 1024, 0.01, n_spares=32, policy="region", n_trials=1500)
+    assert pool >= region
+
+
+# --------------------------------------------------------------------------- #
+# straggler mitigation
+# --------------------------------------------------------------------------- #
+def test_straggler_detection_and_rebalance():
+    sm = StragglerMitigator(n_hosts=4, total_micro=32)
+    sm.observe(np.array([8.0, 8.0, 8.0, 24.0]))
+    assert list(sm.stragglers()) == [3]
+    before = sm.expected_step_time()
+    sm.rebalance()
+    assert sm.assignment.sum() == 32
+    assert sm.expected_step_time() < before
+
+
+@given(st.lists(st.floats(min_value=0.5, max_value=10.0), min_size=2, max_size=8))
+@settings(max_examples=80, deadline=None)
+def test_rebalance_never_hurts(times):
+    n = len(times)
+    sm = StragglerMitigator(n_hosts=n, total_micro=8 * n)
+    sm.observe(np.asarray(times) * sm.assignment)
+    before = sm.expected_step_time()
+    sm.rebalance()
+    assert sm.assignment.sum() == 8 * n
+    assert sm.expected_step_time() <= before + 1e-9
+
+
+def test_ema_converges():
+    sm = StragglerMitigator(n_hosts=2, total_micro=8, ema_decay=0.5)
+    for _ in range(10):
+        sm.observe(np.array([4.0, 8.0]) * sm.assignment / 4)
+    assert sm.ema[1] > sm.ema[0]

@@ -1,0 +1,87 @@
+"""Fault detection (paper Section IV-D) + online verifier integration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.detection import (
+    clb_bytes,
+    coverage,
+    detection_cycles,
+    scan_array,
+    scans_to_full_detection,
+)
+from repro.core.engine import FaultState, HyCAConfig, hyca_matmul
+from repro.core.perf_model import NETWORKS
+from repro.runtime.online_verify import OnlineVerifier, append_fault
+
+
+def test_detection_cycles_formula():
+    assert detection_cycles(32, 32) == 1056
+    assert detection_cycles(64, 64) == 4160
+
+
+def test_clb_size_paper():
+    """CLB = 4·W·Col = 512 B at W=4, Col=32 — 1/4 of the 2 KB IRF."""
+    assert clb_bytes(32) == 512
+    assert clb_bytes(32) * 4 == 2048
+
+
+def test_full_scan_detects_all(rng):
+    fmap = rng.random((32, 32)) < 0.05
+    res = scan_array(rng, fmap, fault_visibility=1.0)
+    assert (res.detected == fmap).all()
+    assert res.false_negatives == 0
+
+
+def test_partial_visibility_needs_rescans(rng):
+    fmap = rng.random((32, 32)) < 0.1
+    n = scans_to_full_detection(rng, fmap, fault_visibility=0.5)
+    assert n >= 1
+
+
+def test_coverage_structure():
+    cov, tot = coverage(NETWORKS["vgg16"], 32, 32)
+    assert cov == tot == 16
+
+
+# --------------------------------------------------------------------------- #
+# OnlineVerifier — the scan lifted to LM matmuls
+# --------------------------------------------------------------------------- #
+def test_verifier_sweeps_whole_array():
+    v = OnlineVerifier(rows=4, cols=4)
+    seen = {v.coord(s) for s in range(16)}
+    assert len(seen) == 16
+    assert v.scan_cycles() == 4 * 4 + 4
+
+
+def test_verifier_detects_injected_fault(rng):
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    state = FaultState(
+        jnp.asarray([[2, 5]], jnp.int32), jnp.asarray([28], jnp.int32), jnp.asarray([1], jnp.int32)
+    )
+    out = hyca_matmul(x, w, state, cfg=HyCAConfig(rows=8, cols=8, mode="unprotected"))
+    v = OnlineVerifier(rows=8, cols=8)
+    flagged = []
+    for step in range(v.scan_cycles()):
+        ok, rc = v.check(x, w, out)
+        if not ok:
+            flagged.append(rc)
+        if v.step >= 64:
+            break
+    assert (2, 5) in flagged
+    assert all(rc == (2, 5) for rc in flagged)
+
+
+def test_append_fault_updates_fpt():
+    state = FaultState(
+        jnp.full((4, 2), -1, jnp.int32), jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32)
+    )
+    s2 = append_fault(state, 3, 7)
+    fpt = np.asarray(s2.fpt)
+    assert (fpt == (3, 7)).all(axis=1).any()
+    s3 = append_fault(s2, 1, 2)
+    fpt3 = np.asarray(s3.fpt)
+    # leftmost-first order preserved (col 2 before col 7)
+    rows = [tuple(r) for r in fpt3 if r[0] >= 0]
+    assert rows == [(1, 2), (3, 7)]

@@ -1,0 +1,102 @@
+"""HyCAEngine data semantics: the paper's headline claims as properties.
+
+  * protected == off (bit-exact) while #faults <= DPPU capacity;
+  * unprotected differs from off when a fault's stuck bit actually flips
+    state on touched outputs;
+  * column-discard degradation matches redundancy.hyca_repair.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import (
+    FaultState,
+    HyCAConfig,
+    fault_state_from_map,
+    hyca_matmul,
+    surviving_columns,
+)
+
+
+def _random_case(rng, m=64, k=32, n=64, dtype=np.int8):
+    if np.issubdtype(dtype, np.integer):
+        x = rng.integers(-40, 40, size=(m, k)).astype(dtype)
+        w = rng.integers(-40, 40, size=(k, n)).astype(dtype)
+    else:
+        x = rng.standard_normal((m, k)).astype(dtype)
+        w = rng.standard_normal((k, n)).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.float32])
+@pytest.mark.parametrize("n_faults", [0, 1, 7, 32])
+def test_protected_bit_exact_within_capacity(rng, dtype, n_faults):
+    x, w = _random_case(np.random.default_rng(1), dtype=dtype)
+    fmap = np.zeros((32, 32), bool)
+    idx = np.random.default_rng(2).choice(1024, size=n_faults, replace=False)
+    fmap.reshape(-1)[idx] = True
+    state = fault_state_from_map(fmap, max_faults=max(n_faults, 1))
+    cfg_off = HyCAConfig(mode="off")
+    cfg_p = HyCAConfig(mode="protected")
+    clean = hyca_matmul(x, w, None, cfg=cfg_off)
+    prot = hyca_matmul(x, w, state, cfg=cfg_p)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(prot))
+
+
+def test_unprotected_corrupts(rng):
+    x, w = _random_case(np.random.default_rng(3))
+    fmap = np.zeros((32, 32), bool)
+    fmap[1, 0] = True
+    # force a high stuck bit so the corruption is visible on any value
+    state = FaultState(
+        jnp.asarray([[1, 0]], jnp.int32), jnp.asarray([30], jnp.int32), jnp.asarray([1], jnp.int32)
+    )
+    clean = hyca_matmul(x, w, None, cfg=HyCAConfig(mode="off"))
+    bad = hyca_matmul(x, w, state, cfg=HyCAConfig(mode="unprotected"))
+    diff = np.asarray(clean) != np.asarray(bad)
+    # only rows i with i%32==1 and cols j with j%32==0 may differ, and some must
+    assert diff.any()
+    ii, jj = np.nonzero(diff)
+    assert (ii % 32 == 1).all() and (jj % 32 == 0).all()
+
+
+def test_partial_repair_beyond_capacity():
+    """Faults beyond DPPU capacity stay corrupted (graceful degradation)."""
+    x, w = _random_case(np.random.default_rng(4), m=32, n=32)
+    fmap = np.zeros((32, 32), bool)
+    fmap[0, 2] = fmap[0, 20] = True  # two faults; capacity 1 repairs col 2
+    state = fault_state_from_map(fmap, max_faults=2)
+    # force visible stuck bits
+    state = FaultState(state.fpt, jnp.asarray([30, 30], jnp.int32), jnp.asarray([1, 1], jnp.int32))
+    clean = hyca_matmul(x, w, None, cfg=HyCAConfig(mode="off"))
+    part = hyca_matmul(x, w, state, cfg=HyCAConfig(mode="protected"), n_repair=1)
+    diff = np.asarray(clean) != np.asarray(part)
+    assert not diff[:, 2].any()      # leftmost fault repaired
+    assert diff[0, 20]               # rightmost fault still corrupt
+
+
+def test_surviving_columns_matches_redundancy():
+    fmap = np.zeros((32, 32), bool)
+    fmap[3, 5] = fmap[4, 9] = fmap[5, 30] = True
+    state = fault_state_from_map(fmap, max_faults=3)
+    cfg = HyCAConfig(mode="protected")
+    assert surviving_columns(state, cfg) == 32  # 3 <= 32 capacity
+    from repro.core.redundancy import hyca_repair
+    ff, surv = hyca_repair(fmap, 2)
+    fpt_sorted_cols = [5, 9, 30]
+    assert surv == fpt_sorted_cols[2] == 30
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_protected_exact_random_configs(seed):
+    rng = np.random.default_rng(seed)
+    n_faults = int(rng.integers(0, 33))
+    fmap = np.zeros((32, 32), bool)
+    fmap.reshape(-1)[rng.choice(1024, size=n_faults, replace=False)] = True
+    state = fault_state_from_map(fmap, max_faults=max(n_faults, 1), rng=rng)
+    x, w = _random_case(rng, m=32, k=32, n=64)
+    clean = hyca_matmul(x, w, None, cfg=HyCAConfig(mode="off"))
+    prot = hyca_matmul(x, w, state, cfg=HyCAConfig(mode="protected"))
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(prot))

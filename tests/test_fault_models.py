@@ -1,0 +1,81 @@
+"""Fault-model unit + property tests (paper Eq. 1, Section V-A2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fault_models as fm
+
+
+def test_per_from_ber_paper_range():
+    # paper: BER 1e-7 .. 1e-3  =>  PER ~0 .. ~6%
+    pers = fm.per_from_ber(np.array([1e-7, 1e-3]))
+    assert pers[0] < 1e-4
+    assert 0.05 < pers[1] < 0.07
+
+
+@given(st.floats(min_value=0, max_value=0.1))
+@settings(max_examples=50, deadline=None)
+def test_per_ber_roundtrip(ber):
+    per = fm.per_from_ber(ber)
+    assert np.isclose(fm.ber_from_per(per), ber, rtol=1e-9, atol=1e-12)
+    assert 0.0 <= per <= 1.0
+
+
+@given(st.floats(min_value=1e-9, max_value=0.2))
+@settings(max_examples=30, deadline=None)
+def test_per_exceeds_ber(ber):
+    # 64 chances to fail => PER > BER, and PER <= 64*BER (union bound)
+    per = float(fm.per_from_ber(ber))
+    assert per >= ber
+    assert per <= 64 * ber + 1e-12
+
+
+def test_random_maps_rate(rng):
+    maps = fm.random_fault_maps(rng, 2000, 32, 32, 0.02)
+    assert abs(maps.mean() - 0.02) < 0.002
+
+
+def test_clustered_count_matches_random(rng):
+    """Spatial clustering must NOT change the fault-count distribution —
+    that is what makes HyCA's FFP distribution-insensitive (Fig. 10)."""
+    n = 3000
+    rmaps = fm.random_fault_maps(rng, n, 32, 32, 0.02)
+    cmaps = fm.clustered_fault_maps(rng, n, 32, 32, 0.02)
+    rc = rmaps.reshape(n, -1).sum(1)
+    cc = cmaps.reshape(n, -1).sum(1)
+    assert abs(rc.mean() - cc.mean()) < 1.0
+    assert abs(rc.std() - cc.std()) < 1.0
+
+
+def test_clustered_is_spatially_clustered(rng):
+    """Mean pairwise fault distance must be smaller than the random model's."""
+    def mean_pair_dist(maps):
+        ds = []
+        for m in maps:
+            r, c = np.nonzero(m)
+            if r.size < 2:
+                continue
+            d = np.sqrt((r[:, None] - r[None, :]) ** 2 + (c[:, None] - c[None, :]) ** 2)
+            ds.append(d[np.triu_indices(r.size, 1)].mean())
+        return np.mean(ds)
+
+    rmaps = fm.random_fault_maps(rng, 300, 32, 32, 0.02)
+    cmaps = fm.clustered_fault_maps(rng, 300, 32, 32, 0.02)
+    assert mean_pair_dist(cmaps) < mean_pair_dist(rmaps) - 2.0
+
+
+def test_stuck_at_apply():
+    f = fm.StuckAtFault(row=0, col=0, bit=3, value=1)
+    out = f.apply(np.array([0, 8, 7], dtype=np.int64))
+    assert list(out) == [8, 8, 15]
+    f0 = fm.StuckAtFault(row=0, col=0, bit=3, value=0)
+    assert list(f0.apply(np.array([8, 15], dtype=np.int64))) == [0, 7]
+
+
+def test_sample_stuck_at(rng):
+    fmap = np.zeros((8, 8), bool)
+    fmap[2, 3] = fmap[5, 1] = True
+    faults = fm.sample_stuck_at(rng, fmap)
+    assert len(faults) == 2
+    assert {(f.row, f.col) for f in faults} == {(2, 3), (5, 1)}
+    assert all(0 <= f.bit < 32 for f in faults)

@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU; TPU target).
+
+Sweeps shapes/dtypes per the methodology: every kernel must match ref.py
+bit-for-bit (f32 accumulation is deterministic in interpret mode).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import HyCAConfig, fault_state_from_map
+from repro.kernels import ref
+from repro.kernels.ops import (
+    fault_grids,
+    faulty_array_matmul,
+    hyca_protected_matmul_fused,
+    hyca_protected_matmul_twopass,
+)
+from repro.kernels.dppu_recompute import dppu_recompute, scatter_overwrite
+from repro.kernels.os_array_matmul import os_array_matmul
+
+SHAPES = [
+    (128, 128, 128, 128, 128, 128),
+    (256, 128, 256, 128, 128, 128),
+    (256, 256, 512, 128, 256, 128),
+    (384, 128, 256, 128, 128, 128),
+]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8]
+
+
+def _case(seed, m, k, n, dtype):
+    rng = np.random.default_rng(seed)
+    if dtype == jnp.int8:
+        x = rng.integers(-30, 30, size=(m, k)).astype(np.int8)
+        w = rng.integers(-30, 30, size=(k, n)).astype(np.int8)
+    else:
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+    return jnp.asarray(x, dtype), jnp.asarray(w, dtype)
+
+
+def _fault_setup(seed, n_faults, rows=32, cols=32):
+    rng = np.random.default_rng(seed)
+    fmap = np.zeros((rows, cols), bool)
+    fmap.reshape(-1)[rng.choice(rows * cols, size=n_faults, replace=False)] = True
+    return fault_state_from_map(fmap, max_faults=max(n_faults, 1), rng=rng)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_os_array_matmul_vs_ref(m, k, n, bm, bn, bk, dtype):
+    x, w = _case(0, m, k, n, dtype)
+    state = _fault_setup(1, 5)
+    cfg = HyCAConfig(mode="unprotected")
+    bit, val, faulty, _ = fault_grids(state, 32, 32, cfg.capacity)
+    out = os_array_matmul(
+        x, w, bit, val, faulty, bm=bm, bn=bn, bk=bk, rows=32, cols=32, interpret=True
+    )
+    expect = ref.os_array_matmul_ref(x, w, bit, val, faulty, bm=bm, bn=bn)
+    if dtype == jnp.int8 or k // bk == 1:
+        # integer accumulation (exact in f32) / single K step: bit-exact,
+        # including the stuck-at corruption of the fp32 bit pattern
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    else:
+        # multi-step K accumulation reassociates the f32 sum vs the oracle's
+        # single matmul; corrupted outputs may flip a low mantissa bit
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_faults", [0, 1, 3, 8])
+def test_dppu_recompute_vs_ref(n_faults):
+    x, w = _case(2, 256, 256, 256, jnp.float32)
+    bm = bn = bk = 128
+    gm, gn = 2, 2
+    rng = np.random.default_rng(3)
+    tiles = rng.choice(gm * gn, size=min(n_faults, gm * gn), replace=False)
+    fpt = np.full((max(n_faults, 1), 2), -1, np.int32)
+    for i, t in enumerate(tiles):
+        fpt[i] = (t // gn, t % gn)
+    fpt_j = jnp.asarray(fpt)
+    tiles_out = dppu_recompute(x, w, fpt_j, bm=bm, bn=bn, bk=bk, interpret=True)
+    clean = jnp.matmul(x, w)
+    corrupted = clean + 7.0  # arbitrary corruption everywhere
+    fixed = scatter_overwrite(corrupted, tiles_out, fpt_j, bm=bm, bn=bn)
+    expect = ref.dppu_recompute_ref(x, w, corrupted, fpt_j, bm=bm, bn=bn)
+    # kernel accumulates K in bk-sized steps; the oracle reassociates
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(expect), rtol=1e-4, atol=1e-4)
+    for i in range(n_faults):
+        ti, tj = fpt[i]
+        if ti < 0:
+            continue
+        np.testing.assert_allclose(
+            np.asarray(fixed[ti * bm : (ti + 1) * bm, tj * bn : (tj + 1) * bn]),
+            np.asarray(clean[ti * bm : (ti + 1) * bm, tj * bn : (tj + 1) * bn]),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n_faults", [0, 4, 16])
+def test_twopass_pipeline_recovers(dtype, n_faults):
+    """Paper-faithful two-pass pipeline: faulty pass + DPPU recompute must be
+    exact wherever the fault is repaired."""
+    x, w = _case(4, 256, 128, 256, dtype)
+    state = _fault_setup(5, n_faults)
+    cfg = HyCAConfig(mode="protected")
+    out = hyca_protected_matmul_twopass(x, w, state, cfg, bm=128, bn=128, bk=128, interpret=True)
+    clean = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(clean), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", SHAPES[:2])
+def test_fused_matches_ref_and_twopass(m, k, n, bm, bn, bk):
+    x, w = _case(6, m, k, n, jnp.float32)
+    state = _fault_setup(7, 6)
+    cfg = HyCAConfig(mode="protected")
+    bit, val, faulty, repaired = fault_grids(state, 32, 32, cfg.capacity)
+    fused = hyca_protected_matmul_fused(x, w, state, cfg, bm=bm, bn=bn, bk=bk, interpret=True)
+    expect = ref.ft_matmul_ref(x, w, bit, val, faulty, repaired, bm=bm, bn=bn)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(expect))
+    two = hyca_protected_matmul_twopass(x, w, state, cfg, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two), rtol=1e-6)
+
+
+def test_faulty_array_matmul_localises_corruption():
+    """Corruption must land only on outputs owned by faulty PEs."""
+    x, w = _case(8, 256, 128, 256, jnp.float32)
+    state = _fault_setup(9, 3)
+    cfg = HyCAConfig(mode="unprotected")
+    out = faulty_array_matmul(x, w, state, cfg, bm=128, bn=128, bk=128, interpret=True)
+    clean = jnp.matmul(x, w)
+    diff = np.asarray(out) != np.asarray(clean)
+    fpt = np.asarray(state.fpt)
+    bad_tiles = {(int(r), int(c)) for r, c in fpt if r >= 0}
+    ii, jj = np.nonzero(diff)
+    for i, j in zip(ii // 128 % 32, jj // 128 % 32):
+        assert (int(i), int(j)) in bad_tiles

@@ -1,0 +1,126 @@
+"""Optimizer, schedule, compression, and data-pipeline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.compression import compress, compressed_bytes, ef_init
+from repro.optim.schedules import cosine_warmup
+
+
+def test_adamw_matches_manual_reference():
+    """One step against a hand-computed AdamW update."""
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0, grad_clip=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    st_ = adamw_init(p)
+    p2, st2 = adamw_update(g, st_, p, cfg, cfg.lr)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mh, vh = m / 0.1, v / 0.01
+    expect = 1.0 - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"])[0], expect, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((4,)) * 3.0}
+    clipped, gnorm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gnorm), 6.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5
+    )
+
+
+def test_weight_decay_pulls_to_zero():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5)
+    p = {"w": jnp.asarray([10.0])}
+    g = {"w": jnp.asarray([0.0])}
+    p2, _ = adamw_update(g, adamw_init(p), p, cfg, cfg.lr)
+    assert float(p2["w"][0]) < 10.0
+
+
+def test_cosine_warmup_shape():
+    lrs = [float(cosine_warmup(s, peak_lr=1.0, warmup=10, total=100)) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 0.02
+    assert np.argmax(lrs) <= 11
+    assert lrs[-1] < 0.2 and lrs[-1] >= 0.1 - 1e-6  # floor 0.1*peak
+
+
+# --------------------------------------------------------------------------- #
+# top-k compression with error feedback
+# --------------------------------------------------------------------------- #
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0.05, 0.25, 1.0]))
+@settings(max_examples=30, deadline=None)
+def test_compression_conserves_mass(seed, ratio):
+    """sent + new_ef == grads + old_ef (error feedback loses nothing)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)}
+    ef = {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)}
+    sent, ef2, kept = compress(g, ef, ratio)
+    np.testing.assert_allclose(
+        np.asarray(sent["w"]) + np.asarray(ef2["w"]),
+        np.asarray(g["w"]) + np.asarray(ef["w"]),
+        rtol=1e-5, atol=1e-6,
+    )
+    if ratio == 1.0:
+        np.testing.assert_allclose(np.asarray(ef2["w"]), 0.0, atol=1e-6)
+
+
+def test_compression_keeps_top_magnitudes(rng):
+    g = {"w": jnp.asarray(rng.standard_normal((64,)), jnp.float32)}
+    sent, _, kept = compress(g, ef_init(g), 0.25)
+    s = np.asarray(sent["w"])
+    nz = np.abs(s[s != 0])
+    z_max = np.abs(np.asarray(g["w"]))[s == 0].max()
+    assert nz.min() >= z_max - 1e-6
+    assert 0.2 <= float(kept) <= 0.3
+
+
+def test_compressed_bytes():
+    g = {"w": jnp.zeros((1000,))}
+    assert compressed_bytes(g, 0.1) == 100 * 6
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+def test_data_deterministic_per_step():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    d1 = SyntheticLM(DataConfig(seed=7, batch=4, seq_len=32), cfg)
+    d2 = SyntheticLM(DataConfig(seed=7, batch=4, seq_len=32), cfg)
+    b1, b2 = d1.batch(5), d2.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch(6)["tokens"], b1["tokens"])
+
+
+def test_data_labels_shifted():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    b = SyntheticLM(DataConfig(seed=0, batch=2, seq_len=16), cfg).batch(0)
+    # labels are the next-token stream of the same sequence
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
+
+
+def test_data_host_sharding_disjoint():
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    full = SyntheticLM(DataConfig(seed=3, batch=8, n_hosts=1, host_id=0, seq_len=16), cfg).batch(2)
+    h0 = SyntheticLM(DataConfig(seed=3, batch=8, n_hosts=2, host_id=0, seq_len=16), cfg).batch(2)
+    h1 = SyntheticLM(DataConfig(seed=3, batch=8, n_hosts=2, host_id=1, seq_len=16), cfg).batch(2)
+    assert h0["tokens"].shape[0] == h1["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    del full
+
+
+def test_modality_stubs():
+    wcfg = get_smoke_config("whisper-tiny")
+    b = SyntheticLM(DataConfig(batch=2, seq_len=8), wcfg).batch(0)
+    assert b["frames"].shape == (2, wcfg.enc_len, wcfg.d_model)
+    vcfg = get_smoke_config("llava-next-mistral-7b")
+    b2 = SyntheticLM(DataConfig(batch=2, seq_len=8), vcfg).batch(0)
+    assert b2["patches"].shape == (2, vcfg.n_patches, vcfg.d_vision)

@@ -1,0 +1,72 @@
+"""Sharding-profile (tp/dp/ep) and rules-context tests."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    DP_RULES,
+    EP_RULES,
+    current_rules,
+    param_specs,
+    resolve_spec,
+    use_rules,
+    zero1_specs,
+)
+from repro.models.lm import init_params
+
+
+def _mesh(shape, names):
+    devs = np.array([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, names)
+
+
+MESH = _mesh((16, 16), ("data", "model"))
+
+
+def test_rules_context_stack():
+    assert current_rules() is DEFAULT_RULES
+    with use_rules(DP_RULES):
+        assert current_rules() is DP_RULES
+        with use_rules(EP_RULES):
+            assert current_rules() is EP_RULES
+        assert current_rules() is DP_RULES
+    assert current_rules() is DEFAULT_RULES
+
+
+def test_dp_profile_replicates_params():
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), get_config("qwen1.5-0.5b")))
+    specs = param_specs(shapes, MESH, profile="dp")
+    assert all(sp == P() for sp in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_dp_profile_batch_over_all_axes():
+    spec = resolve_spec(["batch", None], (256, 4096), MESH, DP_RULES)
+    assert spec == P(("data", "model"))
+    # non-divisible batch drops the model axis gracefully
+    assert resolve_spec(["batch", None], (32, 4096), MESH, DP_RULES) == P(("data",))
+
+
+def test_ep_profile_shards_experts_only():
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), get_config("deepseek-moe-16b")))
+    specs = param_specs(shapes, MESH, profile="ep")
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )[0]
+    for path, sp in flat:
+        names = [str(getattr(p, "key", p)) for p in path]
+        if "moe" in names and names[-1] in ("gate", "up", "down"):
+            assert any(e == "model" for e in sp), (names, sp)
+        elif "moe" in names or names[-1] in ("embed", "lm_head"):
+            continue  # router/shared-expert/tables may shard with the experts
+        else:
+            assert sp == P(), (names, sp)
+
+
+def test_zero1_dp_covers_model_axis():
+    shapes = {"w": jax.ShapeDtypeStruct((256, 1024), np.float32)}
+    specs = zero1_specs(shapes, MESH, profile="dp")
+    # dp profile: the LARGEST divisible dim shards over data*model = 256 ways
+    assert specs["w"][1] == ("data", "model")

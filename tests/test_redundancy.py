@@ -1,0 +1,153 @@
+"""RR/CR/DR/HyCA repair algorithms — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import redundancy as red
+
+
+def _map(rows, cols, coords):
+    m = np.zeros((rows, cols), bool)
+    for r, c in coords:
+        m[r, c] = True
+    return m
+
+
+# --------------------------------------------------------------------------- #
+# unit cases
+# --------------------------------------------------------------------------- #
+def test_rr_single_fault_per_row_ok():
+    m = _map(4, 4, [(0, 1), (1, 3), (3, 0)])
+    ff, surv = red.rr_repair(m, np.zeros(4, bool))
+    assert ff and surv == 4
+
+
+def test_rr_two_faults_same_row_fails():
+    m = _map(4, 4, [(1, 0), (1, 2)])
+    ff, surv = red.rr_repair(m, np.zeros(4, bool))
+    assert not ff
+    assert surv == 0  # leftmost unrepaired fault at col 0
+
+
+def test_rr_dead_spare():
+    m = _map(4, 4, [(2, 3)])
+    spare = np.zeros(4, bool)
+    spare[2] = True
+    ff, surv = red.rr_repair(m, spare)
+    assert not ff and surv == 3
+
+
+def test_cr_column_logic():
+    m = _map(4, 4, [(0, 1), (2, 1)])
+    ff, surv = red.cr_repair(m, np.zeros(4, bool))
+    assert not ff and surv == 1
+    m2 = _map(4, 4, [(0, 1), (2, 3)])
+    ff2, surv2 = red.cr_repair(m2, np.zeros(4, bool))
+    assert ff2 and surv2 == 4
+
+
+def test_dr_row_or_col_spare():
+    # fault (1,2) can use spare 1 (row) or spare 2 (col)
+    m = _map(4, 4, [(1, 2), (1, 3)])  # same row: needs spares {1, 2 or 3}
+    ff, _ = red.dr_repair(m, np.zeros(4, bool))
+    assert ff
+    # three faults meeting only two spares -> infeasible (Hall violation)
+    m2 = _map(4, 4, [(1, 2), (1, 2)])  # degenerate duplicate is one fault
+    ff2, _ = red.dr_repair(m2, np.zeros(4, bool))
+    assert ff2
+
+
+def test_dr_hall_violation():
+    # faults (0,1),(0,1) impossible; construct (0,1),(1,0),(0,0),(1,1):
+    # 4 faults, neighbour spares all in {0,1} -> |N(S)|=2 < 4 -> fail
+    m = _map(4, 4, [(0, 0), (0, 1), (1, 0), (1, 1)])
+    ff, surv = red.dr_repair(m, np.zeros(4, bool))
+    assert not ff and surv <= 1
+
+
+def test_hyca_capacity_rule():
+    m = _map(8, 8, [(0, 5), (3, 2), (7, 7)])
+    assert red.hyca_repair(m, 3) == (True, 8)
+    ff, surv = red.hyca_repair(m, 2)
+    assert not ff and surv == 7  # leftmost-first: cols 2,5 repaired; col 7 dies
+
+
+def test_effective_capacity_unified_vs_grouped():
+    # paper Fig. 15: unified scales only at 16/32; grouped strictly
+    for size, cap in [(16, 16), (24, 16), (32, 32), (40, 32), (48, 32)]:
+        assert red.effective_capacity(red.DPPUConfig(size=size, unified=True), 32) == cap
+    for size in (16, 24, 32, 40, 48):
+        assert red.effective_capacity(red.DPPUConfig(size=size, group_size=8), 32) == size
+
+
+# --------------------------------------------------------------------------- #
+# properties
+# --------------------------------------------------------------------------- #
+coords = st.lists(
+    st.tuples(st.integers(0, 7), st.integers(0, 7)), min_size=0, max_size=20
+)
+
+
+@given(coords, st.integers(0, 12))
+@settings(max_examples=200, deadline=None)
+def test_hyca_ff_iff_count_le_capacity(cs, cap):
+    m = _map(8, 8, cs)
+    n = int(m.sum())
+    ff, surv = red.hyca_repair(m, cap)
+    assert ff == (n <= cap)
+    assert 0 <= surv <= 8
+    if ff:
+        assert surv == 8
+
+
+@given(coords)
+@settings(max_examples=150, deadline=None)
+def test_hyca_dominates_classical(cs):
+    """With healthy spares and capacity == cols, HyCA repairs a superset of
+    every classical scheme (the paper's core architectural claim)."""
+    m = _map(8, 8, cs)
+    ff_h, surv_h = red.hyca_repair(m, 8)
+    for scheme in ("RR", "CR", "DR"):
+        ff_s, surv_s = red.repair(scheme, m)
+        if ff_s:
+            # classical succeeded => #faults per region small => HyCA also ok
+            assert surv_h >= surv_s or ff_h
+        assert surv_h >= surv_s - 8 * 0  # HyCA never worse
+        assert surv_h >= surv_s
+
+
+@given(coords, st.tuples(st.integers(0, 7), st.integers(0, 7)))
+@settings(max_examples=150, deadline=None)
+def test_adding_fault_never_helps(cs, extra):
+    m = _map(8, 8, cs)
+    m2 = m.copy()
+    m2[extra] = True
+    for scheme in ("RR", "CR", "HyCA"):
+        _, s1 = red.repair(scheme, m)
+        _, s2 = red.repair(scheme, m2)
+        assert s2 <= s1
+
+
+@given(coords)
+@settings(max_examples=100, deadline=None)
+def test_dr_matching_is_maximal(cs):
+    """DR's augmenting-path matcher must repair >= any greedy assignment."""
+    m = _map(8, 8, cs)
+    ff, surv = red.dr_repair(m, np.zeros(8, bool))
+    n = int(m.sum())
+    # every fault has at least one neighbour spare, so <= 8 faults in distinct
+    # rows+cols must always be fully matched
+    rs, cols_ = np.nonzero(m)
+    if len(set(rs)) == n and len(set(cols_)) == n:
+        assert ff
+
+
+def test_dppu_capacity_healthy(rng):
+    caps = red.dppu_capacity(rng, red.DPPUConfig(size=32), per=0.0, n=10)
+    assert (caps == 32).all()
+
+
+def test_dppu_capacity_degrades(rng):
+    lo = red.dppu_capacity(rng, red.DPPUConfig(size=32), per=0.01, n=4000).mean()
+    hi = red.dppu_capacity(rng, red.DPPUConfig(size=32), per=0.2, n=4000).mean()
+    assert hi < lo <= 32

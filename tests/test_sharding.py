@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules: divisibility fallback + structural specs.
+
+Uses a 16-device forced-host mesh in a subprocess-free way: these tests only
+build PartitionSpecs (no device allocation), so a fake Mesh over the single
+CPU device grid is enough — Mesh axes/sizes are what the resolver consumes.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import (
+    cache_leaf_spec,
+    leaf_spec,
+    param_specs,
+    resolve_spec,
+    zero1_specs,
+)
+
+
+def _mesh(shape, names):
+    devs = np.array([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, names)
+
+
+MESH2 = _mesh((16, 16), ("data", "model"))
+MESH3 = _mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _prod_of(entry, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([sizes[a] for a in entry]))
+    return sizes[entry]
+
+
+@given(
+    st.lists(st.sampled_from([1, 2, 3, 8, 16, 32, 256, 151936, 49155]), min_size=1, max_size=4),
+)
+@settings(max_examples=100, deadline=None)
+def test_resolve_spec_always_divisible(dims):
+    logical = ["batch", "kv_heads", "mlp", "vocab"][: len(dims)]
+    for mesh in (MESH2, MESH3):
+        spec = resolve_spec(logical, dims, mesh)
+        entries = list(spec) + [None] * (len(dims) - len(spec))
+        for d, e in zip(dims, entries):
+            assert d % _prod_of(e, mesh) == 0
+
+
+def test_resolve_spec_known_cases():
+    assert resolve_spec(["batch", None], (256, 4096), MESH3) == P(("pod", "data"))
+    assert resolve_spec(["batch", None], (1, 1), MESH3) == P()
+    # kv_heads=2 does not divide 16 -> replicated
+    assert resolve_spec([None, None, "kv_heads", None], (1, 8, 2, 128), MESH2) == P()
+
+
+class _KeyEntry:
+    def __init__(self, key):
+        self.key = key
+
+
+def _spec_for(name, shape, mesh, parents=()):
+    path = tuple(_KeyEntry(p) for p in parents) + (_KeyEntry(name),)
+    return leaf_spec(path, shape, mesh)
+
+
+def test_param_specs_megatron_layout():
+    # col-parallel default: output dim sharded
+    assert _spec_for("wq", (4096, 4096), MESH2) == P(None, "model")
+    # row-parallel names: contraction dim sharded
+    assert _spec_for("wo", (4096, 4096), MESH2) == P("model", None)
+    assert _spec_for("down", (14336, 4096), MESH2) == P("model", None)
+    # stacked layer axis stays unsharded
+    assert _spec_for("up", (36, 4096, 14336), MESH2) == P(None, None, "model")
+    # embed: vocab axis only
+    assert _spec_for("embed", (152064, 1024), MESH2) == P("model", None)
+    # expert tensors: expert axis (under a moe parent)
+    assert _spec_for("up", (27, 64, 2048, 1408), MESH2, parents=("moe",)) == P(None, "model", None, None)
+    # kv projection with small but divisible output dim: still col-parallel
+    assert _spec_for("wk", (3072, 2 * 128), MESH2) == P(None, "model")
+    # genuinely non-divisible output falls back to the contraction dim
+    assert _spec_for("wk", (3072, 6 * 11), MESH2) == P("model", None)
+    assert _spec_for("norm", (4096,), MESH2) == P()
+
+
+def test_zero1_shards_largest_dim_over_data():
+    params = {"blocks": {"up": jax.ShapeDtypeStruct((36, 4096, 14336), np.float32)}}
+    specs = zero1_specs(params, MESH3)
+    s = specs["blocks"]["up"]
+    # model on dim2 (param layout) + (pod,data) on the largest replicated dim
+    assert s[2] == "model"
+    assert s[1] == ("pod", "data")
+
+
+def test_cache_specs_prefers_heads_then_seq():
+    # kv=32 divides 16 -> heads sharded
+    s = cache_leaf_spec((_KeyEntry("attn"), _KeyEntry("k")), (38, 128, 32768, 32, 64), MESH2)
+    assert s[3] == "model"
+    # kv=2 does not divide -> falls back to KV length (flash-decoding layout)
+    s2 = cache_leaf_spec((_KeyEntry("attn"), _KeyEntry("k")), (30, 128, 32768, 2, 128), MESH2)
+    assert s2[2] == "model" and (len(s2) < 4 or s2[3] is None)
+    # batch over data axes
+    assert s[1] == "data" and s2[1] == "data"
+
+
+def test_param_specs_whole_model():
+    from repro.configs import get_config
+    from repro.models.lm import init_params
+    cfg = get_config("granite-8b")
+    shapes = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    specs = param_specs(shapes, MESH3)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    sizes = dict(zip(MESH3.axis_names, MESH3.devices.shape))
+    for sh, sp in zip(flat_shapes, flat_specs):
+        entries = list(sp) + [None] * (len(sh.shape) - len(sp))
+        for d, e in zip(sh.shape, entries):
+            assert d % _prod_of(e, MESH3) == 0, (sh.shape, sp)
+    # at least the big matmuls must actually be sharded
+    n_sharded = sum(any(e is not None for e in sp) for sp in flat_specs)
+    assert n_sharded >= 6
