@@ -29,6 +29,7 @@ def main(argv=None) -> int:
         fig13_runtime_vs_size,
         fig14_scalability,
         fig15_dppu_grouping,
+        serving_goodput,
         tab01_detection,
     )
 
@@ -44,6 +45,7 @@ def main(argv=None) -> int:
         "fig15_dppu_grouping": fig15_dppu_grouping.run,
         "tab01_detection": tab01_detection.run,
         "cluster_ffp": cluster_ffp.run,
+        "serving_goodput": serving_goodput.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -159,8 +159,10 @@ def hyca_matmul(
     corrupted = _corrupt(out, bit, val, faulty)
     if cfg.mode == "unprotected":
         return corrupted.astype(out.dtype)
-    # protected: DPPU recompute of the first n_repair FPT entries.
-    k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults)
+    # protected: DPPU recompute of the first n_repair FPT entries.  The DPPU
+    # can never repair more faults than it has capacity for, whatever the
+    # caller asks — an unclamped n_repair would overstate protection.
+    k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults, cfg.capacity)
     repaired_mask = jnp.zeros((cfg.rows, cfg.cols), bool)
     valid = state.fpt[:k, 0] >= 0
     r = jnp.where(valid, state.fpt[:k, 0], 0)

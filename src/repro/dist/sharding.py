@@ -1,0 +1,312 @@
+"""Logical-axis sharding: rules, divisibility fallback, structural specs.
+
+The model code never names mesh axes.  It annotates activations with *logical*
+axes (``shard(x, "batch", "seq", "embed")``) and the resolver maps those onto
+whatever mesh is current, dropping axes that do not divide the dimension
+(small smoke shapes and odd vocab sizes must never fail to lower).
+
+Three rule profiles select the parallelism style at trace time:
+
+  * ``DEFAULT_RULES`` (tp) — Megatron tensor parallel: batch over the data
+    axes, vocab/mlp/head axes over ``model``;
+  * ``DP_RULES``      (dp) — pure data parallel: batch over EVERY mesh axis,
+    params replicated;
+  * ``EP_RULES``      (ep) — expert parallel: experts over ``model``, batch
+    over the data axes.
+
+Param structural specs (:func:`param_specs`) implement the Megatron layout
+from leaf *names*: col-parallel by default (output dim over ``model``),
+row-parallel for the contraction-side projections (``wo``/``down``),
+vocab-dim for embedding tables, expert-dim for MoE expert stacks; a
+non-divisible preferred dim falls back to the other matmul dim, then to
+replication.  :func:`zero1_specs` additionally spreads the largest still-
+replicated dim over the data axes (ZeRO-1 optimizer-state sharding).
+KV-cache specs (:func:`cache_specs`) shard KV heads over ``model`` when they
+divide it, otherwise the KV *length* (flash-decoding layout).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Iterable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------- #
+# rule profiles + trace-time contexts
+# --------------------------------------------------------------------------- #
+# logical axis -> ordered mesh-axis candidates (combined; trailing axes are
+# dropped until the dimension is divisible)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "expert": ("model",),
+}
+
+DP_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data", "model"),
+    "seq": (),
+    "embed": (),
+    "vocab": (),
+    "mlp": (),
+    "heads": (),
+    "kv_heads": (),
+    "expert": (),
+}
+
+EP_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "vocab": (),
+    "mlp": (),
+    "heads": (),
+    "kv_heads": (),
+    "expert": ("model",),
+}
+
+PROFILE_RULES = {"tp": DEFAULT_RULES, "dp": DP_RULES, "ep": EP_RULES}
+
+_RULES: contextvars.ContextVar[dict] = contextvars.ContextVar("rules", default=DEFAULT_RULES)
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar("mesh", default=None)
+
+
+def current_rules() -> dict[str, tuple[str, ...]]:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict[str, tuple[str, ...]]):
+    tok = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(tok)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+# --------------------------------------------------------------------------- #
+# resolver
+# --------------------------------------------------------------------------- #
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _prod(sizes: dict[str, int], axes: Iterable[str]) -> int:
+    return int(math.prod(sizes[a] for a in axes))
+
+
+def resolve_spec(
+    logical: list[str | None],
+    dims: tuple[int, ...],
+    mesh: Mesh,
+    rules: dict[str, tuple[str, ...]] | None = None,
+) -> P:
+    """Map logical axis names onto mesh axes with divisibility fallback.
+
+    Trailing candidate axes are dropped until the combined size divides the
+    dimension; a fully dropped entry replicates.  Multi-axis rules keep tuple
+    entries (``("pod", "data")``) even when reduced to one axis.
+    """
+    rules = current_rules() if rules is None else rules
+    sizes = _axis_sizes(mesh)
+    entries: list[Any] = []
+    for name, d in zip(logical, dims):
+        if name is None:
+            entries.append(None)
+            continue
+        cand = tuple(a for a in rules.get(name, ()) if a in sizes)
+        multi = len(cand) > 1
+        while cand and d % _prod(sizes, cand) != 0:
+            cand = cand[:-1]
+        if not cand:
+            entries.append(None)
+        elif multi:
+            entries.append(tuple(cand))
+        else:
+            entries.append(cand[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Constrain ``x`` to the current mesh/rules; no-op outside a mesh ctx."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(list(logical), x.shape, mesh, current_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------- #
+# structural param specs (Megatron layout from leaf names)
+# --------------------------------------------------------------------------- #
+_ROW_PARALLEL = {"wo", "down"}          # contraction dim over model
+_EMBED_TABLES = {"embed", "lm_head"}    # vocab dim over model
+_MOE_EXPERT = {"gate", "up", "down"}    # expert-stacked tensors under "moe"
+
+
+def _path_names(path: tuple) -> list[str]:
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def _full_rank(nd: int, dim: int, entry: Any) -> P:
+    entries: list[Any] = [None] * nd
+    entries[dim] = entry
+    return P(*entries)
+
+
+def leaf_spec(path: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Megatron TP spec for one param leaf (leading stacked axes unsharded)."""
+    sizes = _axis_sizes(mesh)
+    nd = len(shape)
+    if "model" not in sizes or nd < 2:
+        return P()
+    m = sizes["model"]
+    names = _path_names(path)
+    name = names[-1]
+
+    def first_divisible(dims: list[int]) -> P:
+        for d in dims:
+            if shape[d] % m == 0:
+                return _full_rank(nd, d, "model")
+        return P()
+
+    if "moe" in names[:-1] and "shared" not in names and name in _MOE_EXPERT and nd >= 3:
+        # expert-stacked (…, E, d, f): expert axis over model; shared-expert
+        # FFNs fall through to the plain Megatron layout below.
+        expert = first_divisible([nd - 3])
+        if expert != P():
+            return expert
+    if name in _EMBED_TABLES:
+        return first_divisible([nd - 2, nd - 1])
+    if name in _ROW_PARALLEL:
+        return first_divisible([nd - 2, nd - 1])
+    return first_divisible([nd - 1, nd - 2])  # col-parallel default
+
+
+def _ep_leaf_spec(path: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    sizes = _axis_sizes(mesh)
+    nd = len(shape)
+    names = _path_names(path)
+    if "model" not in sizes or "moe" not in names[:-1] or names[-1] not in _MOE_EXPERT:
+        return P()
+    # expert-stacked tensors: shard the expert axis; shared-expert FFNs (and a
+    # non-divisible expert count) fall back to the Megatron TP layout so the
+    # big matmuls stay sharded.
+    if "shared" not in names and nd >= 3 and shape[nd - 3] % sizes["model"] == 0:
+        return _full_rank(nd, nd - 3, "model")
+    return leaf_spec(path, shape, mesh)
+
+
+def param_specs(params_shapes: Any, mesh: Mesh, profile: str = "tp") -> Any:
+    """Structural specs for a whole param tree under a parallelism profile."""
+    if profile == "dp":
+        fn = lambda path, leaf: P()
+    elif profile == "ep":
+        fn = lambda path, leaf: _ep_leaf_spec(path, leaf.shape, mesh)
+    else:
+        fn = lambda path, leaf: leaf_spec(path, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(fn, params_shapes)
+
+
+def zero1_specs(params_shapes: Any, mesh: Mesh, profile: str = "tp") -> Any:
+    """Param layout + the largest replicated dim spread over the data axes
+    (ZeRO-1: optimizer state sharded across data-parallel workers)."""
+    sizes = _axis_sizes(mesh)
+    if profile == "dp":
+        data_axes = tuple(mesh.axis_names)
+    else:
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dprod = _prod(sizes, data_axes)
+    entry = tuple(data_axes) if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def f(path, leaf):
+        nd = len(leaf.shape)
+        base = P() if profile == "dp" else leaf_spec(path, leaf.shape, mesh)
+        entries = list(base) + [None] * (nd - len(base))
+        if entry is None or dprod == 1:
+            return P(*entries)
+        free = [i for i in range(nd) if entries[i] is None]
+        for i in sorted(free, key=lambda i: -leaf.shape[i]):
+            if leaf.shape[i] % dprod == 0:
+                entries[i] = entry
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache specs
+# --------------------------------------------------------------------------- #
+def cache_leaf_spec(path: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Spec for one cache leaf: batch over data axes; KV heads over ``model``
+    when divisible, else KV length (flash-decoding layout).
+
+    Stacked leaves are (n_layers, batch, ...); the encoder memory ("enc") is
+    (batch, len, d).
+    """
+    sizes = _axis_sizes(mesh)
+    nd = len(shape)
+    names = _path_names(path)
+    entries: list[Any] = [None] * nd
+
+    batch_dim = 0 if names[-1] == "enc" else (1 if nd >= 2 else 0)
+    data_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    cand = data_axes
+    while cand and shape[batch_dim] % _prod(sizes, cand) != 0:
+        cand = cand[:-1]
+    if cand:
+        entries[batch_dim] = tuple(cand) if len(data_axes) > 1 else cand[0]
+
+    if "model" in sizes:
+        m = sizes["model"]
+        if nd >= 5:           # (L, B, S, H, D): heads then length
+            dims = [3, 2]
+        elif nd == 4:         # (L, B, S, C) latent / state: feature then length
+            dims = [3, 2]
+        elif names[-1] == "enc" and nd == 3:
+            dims = [2]
+        else:
+            dims = []
+        for d in dims:
+            if d != batch_dim and shape[d] % m == 0:
+                entries[d] = "model"
+                break
+    return P(*entries)
+
+
+def cache_specs(cache_shapes: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_leaf_spec(path, leaf.shape, mesh), cache_shapes
+    )

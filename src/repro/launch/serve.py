@@ -12,12 +12,11 @@ import time
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.dist.sharding import cache_specs, named, param_specs, resolve_spec, use_mesh
-from repro.models.lm import LMConfig, decode_step, forward, init_cache, init_params
+from repro.dist.sharding import cache_specs, named, param_specs, resolve_spec
+from repro.models.lm import LMConfig, decode_step, forward
 
 
 def make_prefill(cfg: LMConfig, mesh: Mesh, params_shapes: Any, batch_shapes: Any):
@@ -60,49 +59,67 @@ def make_decode(cfg: LMConfig, mesh: Mesh, params_shapes: Any, cache_shapes: Any
 
 
 # --------------------------------------------------------------------------- #
-# CPU-scale batched-request driver
+# CLI — thin front-end over repro.serving (the fault-aware runtime)
 # --------------------------------------------------------------------------- #
 def main(argv=None):
     from repro.configs import get_smoke_config
-    from repro.launch.mesh import make_host_mesh
+    from repro.serving import FaultTolerantServer, ServerConfig
 
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Fault-aware continuous-batching inference server (smoke scale)."
+    )
     ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4, help="decode slots (max batch)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16, help="max new tokens per request")
+    ap.add_argument("--mode", default="protected", choices=["off", "protected", "unprotected"])
+    ap.add_argument("--faults", type=int, default=0, help="faults injected at power-on")
+    ap.add_argument("--fault-rate", type=float, default=0.0, help="Poisson new faults/step")
+    ap.add_argument("--rows", type=int, default=8)
+    ap.add_argument("--cols", type=int, default=8)
+    ap.add_argument("--dppu", type=int, default=4)
+    ap.add_argument("--protect-fraction", type=float, default=1.0)
+    ap.add_argument("--sla", type=int, default=0, help="deadline in steps (0 = none)")
+    ap.add_argument("--max-steps", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch)
-    mesh = make_host_mesh()
-    key = jax.random.key(args.seed)
-    params = init_params(key, cfg)
-    smax = args.prompt_len + args.gen + 1
-    cache = init_cache(cfg, args.batch, smax)
-
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)).astype(np.int32)
-
-    dfn, _ = make_decode(
-        cfg, mesh, jax.eval_shape(lambda: params), jax.eval_shape(lambda: cache)
+    cfg = ServerConfig(
+        arch=args.arch, n_slots=args.slots, smax=args.prompt_len + args.gen + 2,
+        mode=args.mode, rows=args.rows, cols=args.cols, dppu_size=args.dppu,
+        protect_fraction=args.protect_fraction, fault_rate=args.fault_rate,
+        seed=args.seed,
     )
-    with use_mesh(mesh):
-        # prefill via repeated decode (smoke-scale; production uses make_prefill)
-        t0 = time.perf_counter()
-        for t in range(args.prompt_len):
-            logits, cache = dfn(params, cache, {"token": jnp.asarray(prompts[:, t : t + 1])})
-        generated = []
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        for _ in range(args.gen):
-            generated.append(np.asarray(tok))
-            logits, cache = dfn(params, cache, {"token": tok})
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        dt = time.perf_counter() - t0
-    gen = np.concatenate(generated, axis=1)
-    tput = args.batch * (args.prompt_len + args.gen) / dt
-    print(f"[serve] arch={cfg.name} batch={args.batch} gen={gen.shape} throughput={tput:.1f} tok/s")
-    return gen
+    server = FaultTolerantServer(cfg)
+    if args.faults:
+        server.injector.inject_n(args.faults)
+        if args.mode == "protected":
+            server.manager.bist()
+
+    lm = get_smoke_config(args.arch)
+    rng = np.random.default_rng(args.seed)
+    trace = [
+        {
+            "step": int(rng.integers(0, max(args.requests // 2, 1))),
+            "prompt": rng.integers(0, lm.vocab, size=args.prompt_len),
+            "max_new_tokens": args.gen,
+            **({"deadline_step": int(rng.integers(0, args.requests)) + args.sla} if args.sla else {}),
+        }
+        for _ in range(args.requests)
+    ]
+    t0 = time.perf_counter()
+    summary = server.run(trace, max_steps=args.max_steps)
+    dt = time.perf_counter() - t0
+    print(f"[serve] arch={lm.name} mode={args.mode} slots={args.slots} "
+          f"faults={server.injector.n_faults} confirmed={server.manager.n_confirmed} "
+          f"surviving_cols={server.manager.surviving_cols}/{args.cols}")
+    for k in ("steps", "tokens", "tokens_per_step", "goodput_tokens",
+              "requests_completed", "requests_failed", "ttft_mean_steps",
+              "queue_depth_mean", "scan_sweeps", "effective_slots_final"):
+        print(f"    {k:>22} = {summary[k]}")
+    print(f"    {'wall_s':>22} = {dt:.2f}")
+    return summary
 
 
 if __name__ == "__main__":

@@ -460,12 +460,37 @@ def _decode_scan(f, x, xs, cfg: LMConfig):
     return x, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
 
 
-def decode_step(params: Params, cfg: LMConfig, cache: Params, batch: dict) -> tuple[jax.Array, Params]:
-    """batch: {"token": (B, 1) int32}.  Returns (logits (B,1,V), new cache)."""
+def _gated_dot(dot: Callable, flag: jax.Array) -> Callable:
+    """Per-layer protection gate: route through ``dot`` (the fault-aware array
+    path) when ``flag`` is set, else the plain matmul.  XLA CSEs the shared
+    plain matmul inside ``dot``, so the gate costs one select."""
+    return lambda a, b: jnp.where(flag, dot(a, b), jnp.matmul(a, b))
+
+
+def decode_step(
+    params: Params,
+    cfg: LMConfig,
+    cache: Params,
+    batch: dict,
+    *,
+    dot: Callable | None = None,
+    protect_mask: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """batch: {"token": (B, 1) int32}.  Returns (logits (B,1,V), new cache).
+
+    ``dot`` mirrors :func:`forward`'s injection hook: the dense FFN matmuls
+    run through it (serving threads the HyCA-protected matmul here).  As in
+    :func:`forward`, expert matmuls inside ``moe_forward`` are NOT routed
+    through ``dot`` — for the moe family only the ``first_k_dense`` blocks
+    touch the array path.  ``protect_mask`` (bool, one entry per main-stack
+    layer; dense/vlm families) gates ``dot`` per layer so only a
+    configurable fraction of layers runs on the protected array path.
+    """
     tok = batch["token"]
     x = params["embed"].astype(cfg.dtype)[tok]
     x = shard(x, "batch", None, "embed")
     act = _ACTS[cfg.act]
+    d = jnp.matmul if dot is None else dot
 
     if cfg.family in ("dense", "vlm", "moe"):
         is_moe = cfg.family == "moe"
@@ -476,21 +501,27 @@ def decode_step(params: Params, cfg: LMConfig, cache: Params, batch: dict) -> tu
                 lp, c = inp
                 h, c2 = _attn_decode(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, c)
                 x = x + h
-                x = x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act)
+                x = x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, dot=d)
                 return x, c2
             x, cd = _decode_scan(fd, x, (blocks, cache["attn_dense"]), cfg)
             new_cache["attn_dense"] = cd
         blocks = _cast(params["blocks"], cfg.dtype)
         def f(x, inp):
-            lp, c = inp
+            if protect_mask is None:
+                lp, c = inp
+                flag = None
+            else:
+                lp, c, flag = inp
             h, c2 = _attn_decode(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, c)
             x = x + h
             if is_moe:
                 y, _ = moe_forward(_norm(x, lp["ln2"], cfg), lp["moe"], cfg.moe)
             else:
-                y = ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act)
+                dd = d if flag is None else _gated_dot(d, flag)
+                y = ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, dot=dd)
             return shard(x + y, "batch", None, "embed"), c2
-        x, ca = _decode_scan(f, x, (blocks, cache["attn"]), cfg)
+        xs = (blocks, cache["attn"]) if protect_mask is None else (blocks, cache["attn"], protect_mask)
+        x, ca = _decode_scan(f, x, xs, cfg)
         new_cache["attn"] = ca
 
     elif cfg.family == "ssm":
@@ -517,7 +548,7 @@ def decode_step(params: Params, cfg: LMConfig, cache: Params, batch: dict) -> tu
             acache = jax.tree.map(lambda a: a[gi], cache["shared_attn"])
             h, ac2 = _attn_decode(_norm(x, shared["ln1"], cfg), shared["attn"], cfg, acache)
             x = x + h
-            x = x + ffn(_norm(x, shared["ln2"], cfg), shared["ffn"], act=act)
+            x = x + ffn(_norm(x, shared["ln2"], cfg), shared["ffn"], act=act, dot=d)
             attn_caches.append(ac2)
         new_cache = {
             "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *mamba_caches),
@@ -533,7 +564,7 @@ def decode_step(params: Params, cfg: LMConfig, cache: Params, batch: dict) -> tu
             h, c2 = gqa_decode(layernorm(x, lp["ln1"]), lp["attn"], cfg.attn_cfg, c)
             x = x + h
             x = x + ed.cross_attn(layernorm(x, lp["ln_x"]), enc, lp["xattn"], xcfg)
-            x = x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu)
+            x = x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu, dot=d)
             return x, c2
         x, ca = _decode_scan(f, x, (blocks, cache["attn"]), cfg)
         new_cache = {"attn": ca, "enc": enc}

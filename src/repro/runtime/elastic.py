@@ -87,6 +87,49 @@ def plan_remesh(
     )
 
 
+@dataclasses.dataclass
+class SparePool:
+    """Event-driven spare allocation — the same dichotomy as
+    :func:`spare_pool_ffp`, but consumed incrementally by a running fleet.
+
+    ``policy="pool"``: any spare replaces any retired replica (the DPPU
+    analogue).  ``policy="region"``: spares are pinned per region
+    (``n_spares // n_regions`` each) and can only replace failures in their
+    own region (RR/CR analogue) — utilization collapses under clustered
+    failures.
+    """
+
+    n_spares: int
+    policy: str = "pool"
+    n_regions: int = 1
+
+    def __post_init__(self):
+        if self.policy not in ("pool", "region"):
+            raise ValueError(self.policy)
+        if self.policy == "region":
+            self._per_region = [self.n_spares // self.n_regions] * self.n_regions
+        self._taken = 0
+
+    @property
+    def remaining(self) -> int:
+        if self.policy == "region":
+            return sum(self._per_region)
+        return self.n_spares - self._taken
+
+    def try_allocate(self, region: int = 0) -> bool:
+        """Consume one spare for a retired replica in ``region``."""
+        if self.policy == "pool":
+            if self._taken < self.n_spares:
+                self._taken += 1
+                return True
+            return False
+        r = region % self.n_regions
+        if self._per_region[r] > 0:
+            self._per_region[r] -= 1
+            return True
+        return False
+
+
 def spare_pool_ffp(
     rng: np.random.Generator,
     n_hosts: int,

@@ -1,0 +1,25 @@
+"""repro.serving — fault-aware continuous-batching inference runtime.
+
+See docs/serving.md for the architecture.  Quick start::
+
+    from repro.serving import FaultTolerantServer, ServerConfig
+
+    srv = FaultTolerantServer(ServerConfig(mode="protected"))
+    srv.submit([1, 2, 3], max_new_tokens=8)
+    summary = srv.run(max_steps=64)
+"""
+from repro.serving.fault_manager import (  # noqa: F401
+    CONFIRMED,
+    HEALTHY,
+    REPAIRED,
+    RETIRED,
+    SUSPECT,
+    FaultInjector,
+    FaultManager,
+    FaultManagerConfig,
+)
+from repro.serving.fleet import FleetConfig, run_fleet  # noqa: F401
+from repro.serving.metrics import ServingMetrics, StepRecord  # noqa: F401
+from repro.serving.queue import CompletedRequest, Request, RequestQueue  # noqa: F401
+from repro.serving.scheduler import ContinuousBatchingScheduler, Slot  # noqa: F401
+from repro.serving.server import FaultTolerantServer, ModelBundle, ServerConfig  # noqa: F401

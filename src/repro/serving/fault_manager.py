@@ -1,0 +1,254 @@
+"""PE fault lifecycle for the serving runtime (paper Sections IV-C/IV-D).
+
+Two actors, deliberately separated:
+
+  * :class:`FaultInjector` — the *hardware*.  Owns the ground-truth fault map
+    and per-PE stuck-at signatures (sampled with ``core.fault_models``
+    semantics), can accumulate new faults over time, and exposes the two ways
+    software observes it: the :class:`~repro.core.engine.FaultState` that
+    corrupts the protected matmul path, and corrupted *probe* computations.
+  * :class:`FaultManager` — the *runtime*.  Never reads the truth directly.
+    It interleaves one :class:`~repro.runtime.online_verify.OnlineVerifier`
+    scan step per decode step, probing one PE per step against the corrupted
+    hardware output (the paper's reserved-DPPU-group AR = BAR + PR check),
+    and drives each PE through the lifecycle
+
+        HEALTHY -> SUSPECT -> CONFIRMED -> REPAIRED | RETIRED
+
+    A flagged PE becomes SUSPECT; ``confirm_hits`` total flags promote it to
+    CONFIRMED and append it to the engine FPT (``online_verify.append_fault``
+    keeps it leftmost-sorted).  Confirmed faults within DPPU capacity are
+    REPAIRED (recomputed every window); the leftmost-first overflow is
+    RETIRED — its column and everything right of it is disconnected from the
+    output buffers, so the array keeps computing *correct* results on the
+    surviving column prefix at proportionally lower throughput.  The manager
+    publishes that as ``capacity_fraction`` and the scheduler shrinks
+    admission accordingly.
+
+Because confirmed faults are either repaired (DPPU recompute) or avoided
+(column remap), only *unconfirmed* faults corrupt served tokens — exactly the
+paper's runtime story: a new fault corrupts outputs for at most one detection
+latency, then the system is clean again (degraded if over capacity).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FaultState, HyCAConfig, fault_state_from_map, surviving_columns
+from repro.runtime.online_verify import OnlineVerifier, append_fault
+
+HEALTHY, SUSPECT, CONFIRMED, REPAIRED, RETIRED = "healthy", "suspect", "confirmed", "repaired", "retired"
+_LIFECYCLE = (HEALTHY, SUSPECT, CONFIRMED, REPAIRED, RETIRED)
+
+
+# --------------------------------------------------------------------------- #
+# hardware
+# --------------------------------------------------------------------------- #
+class FaultInjector:
+    """Ground-truth fault map + stuck-at signatures for one rows×cols array."""
+
+    def __init__(self, rows: int, cols: int, *, seed: int = 0):
+        self.rows, self.cols = rows, cols
+        self.rng = np.random.default_rng(seed)
+        self.fault_map = np.zeros((rows, cols), bool)
+        self.stuck_bit = np.zeros((rows, cols), np.int32)
+        self.stuck_val = np.zeros((rows, cols), np.int32)
+        self.version = 0  # bumped on every change; lets callers cache states
+
+    @property
+    def n_faults(self) -> int:
+        return int(self.fault_map.sum())
+
+    def coords(self) -> list[tuple[int, int]]:
+        return [(int(r), int(c)) for r, c in zip(*np.nonzero(self.fault_map))]
+
+    def inject_at(self, row: int, col: int, *, bit: int | None = None, val: int | None = None) -> None:
+        if self.fault_map[row, col]:
+            return
+        self.fault_map[row, col] = True
+        self.stuck_bit[row, col] = self.rng.integers(0, 32) if bit is None else bit
+        self.stuck_val[row, col] = self.rng.integers(0, 2) if val is None else val
+        self.version += 1
+
+    def inject_n(self, n: int) -> None:
+        """n new faults at uniform-random healthy PEs."""
+        free = np.argwhere(~self.fault_map)
+        if free.size == 0 or n <= 0:
+            return
+        pick = self.rng.choice(len(free), size=min(n, len(free)), replace=False)
+        for r, c in free[np.atleast_1d(pick)]:
+            self.inject_at(int(r), int(c))
+
+    def inject_map(self, fault_map: np.ndarray) -> None:
+        for r, c in np.argwhere(fault_map):
+            self.inject_at(int(r), int(c))
+
+    def step(self, rate: float) -> int:
+        """Accumulate Poisson(rate) new faults (one serving step's wearout)."""
+        n = int(self.rng.poisson(rate)) if rate > 0 else 0
+        if n:
+            self.inject_n(n)
+        return n
+
+    # -- software-visible views ------------------------------------------- #
+    def fault_state(self, *, exclude: frozenset[tuple[int, int]] = frozenset(),
+                    max_faults: int | None = None) -> FaultState:
+        """Engine FaultState of the truth minus ``exclude`` (confirmed faults
+        are repaired or remapped, so they no longer corrupt)."""
+        m = self.fault_map.copy()
+        for r, c in exclude:
+            m[r, c] = False
+        state = fault_state_from_map(m, max_faults=max_faults or self.rows * self.cols)
+        # fault_state_from_map samples fresh signatures; overwrite with truth
+        fpt = np.asarray(state.fpt)
+        bits = np.asarray(state.stuck_bit).copy()
+        vals = np.asarray(state.stuck_val).copy()
+        for i, (r, c) in enumerate(fpt):
+            if r >= 0:
+                bits[i] = self.stuck_bit[r, c]
+                vals[i] = self.stuck_val[r, c]
+        return FaultState(jnp.asarray(fpt), jnp.asarray(bits), jnp.asarray(vals))
+
+    def probe_operands(self, sweep: int, window: int = 8) -> tuple[np.ndarray, np.ndarray]:
+        """Deterministic small-int probe operands, fresh per sweep so faults
+        whose stuck bit coincides with one probe's value are caught by the
+        next sweep (the paper's re-scan of marginal faults)."""
+        rng = np.random.default_rng((sweep + 1) * 7919)
+        px = rng.integers(-4, 8, size=(self.rows, window)).astype(np.int32)
+        pw = rng.integers(-4, 8, size=(window, self.cols)).astype(np.int32)
+        return px, pw
+
+    def corrupted_probe(self, px: np.ndarray, pw: np.ndarray) -> np.ndarray:
+        """What the faulty array returns for the probe matmul: out[i, j] is
+        PE(i, j)'s accumulator with its stuck bit forced."""
+        out = (px.astype(np.int64) @ pw.astype(np.int64)).astype(np.int32)
+        mask = (np.int32(1) << self.stuck_bit).astype(np.int32)
+        stuck_on = (out | mask).astype(np.int32)
+        stuck_off = (out & ~mask).astype(np.int32)
+        bad = np.where(self.stuck_val > 0, stuck_on, stuck_off)
+        return np.where(self.fault_map, bad, out)
+
+
+# --------------------------------------------------------------------------- #
+# runtime lifecycle
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class FaultManagerConfig:
+    confirm_hits: int = 2      # probe flags needed to promote SUSPECT -> CONFIRMED
+    probe_window: int = 8      # S — MACs recomputed per check
+    max_boot_sweeps: int = 4   # whole-array sweeps in the power-on scan
+
+
+class FaultManager:
+    """HEALTHY → SUSPECT → CONFIRMED → REPAIRED/RETIRED state machine."""
+
+    def __init__(self, hyca: HyCAConfig, injector: FaultInjector,
+                 cfg: FaultManagerConfig | None = None):
+        assert (hyca.rows, hyca.cols) == (injector.rows, injector.cols)
+        self.hyca = hyca
+        self.injector = injector
+        self.cfg = cfg or FaultManagerConfig()
+        self.verifier = OnlineVerifier(rows=hyca.rows, cols=hyca.cols, window=self.cfg.probe_window)
+        self.pe_state = np.full((hyca.rows, hyca.cols), HEALTHY, dtype=object)
+        self.hits = np.zeros((hyca.rows, hyca.cols), np.int32)
+        n = hyca.rows * hyca.cols
+        self.confirmed_state = FaultState(
+            jnp.full((n, 2), -1, jnp.int32), jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32)
+        )
+        self.scans = 0
+        self.repairs = 0
+
+    # ------------------------------------------------------------------ #
+    def confirmed_coords(self) -> frozenset[tuple[int, int]]:
+        fpt = np.asarray(self.confirmed_state.fpt)
+        return frozenset((int(r), int(c)) for r, c in fpt if r >= 0)
+
+    @property
+    def n_confirmed(self) -> int:
+        return len(self.confirmed_coords())
+
+    @property
+    def surviving_cols(self) -> int:
+        if self.n_confirmed <= self.hyca.capacity:
+            return self.hyca.cols
+        return surviving_columns(self.confirmed_state, self.hyca)
+
+    @property
+    def capacity_fraction(self) -> float:
+        """1.0 while confirmed faults fit the DPPU; the surviving column
+        prefix fraction once they exceed it (throughput, not correctness)."""
+        return self.surviving_cols / self.hyca.cols
+
+    def counts(self) -> dict[str, int]:
+        return {s: int((self.pe_state == s).sum()) for s in _LIFECYCLE}
+
+    # ------------------------------------------------------------------ #
+    def _confirm(self, r: int, c: int) -> None:
+        self.confirmed_state = append_fault(self.confirmed_state, r, c)
+        self._reassign_repair()
+
+    def _reassign_repair(self) -> None:
+        """Leftmost-first: the first ``capacity`` confirmed faults are DPPU-
+        repaired; the overflow is retired with its column region."""
+        coords = sorted(self.confirmed_coords(), key=lambda rc: (rc[1], rc[0]))
+        for i, (r, c) in enumerate(coords):
+            new = REPAIRED if i < self.hyca.capacity else RETIRED
+            if self.pe_state[r, c] != new:
+                self.pe_state[r, c] = new
+                if new == REPAIRED:
+                    self.repairs += 1
+
+    def scan_step(self) -> tuple[bool, tuple[int, int]]:
+        """One verifier probe (call once per decode step).  Returns
+        (check passed, scanned coordinate)."""
+        sweep = self.verifier.step // (self.hyca.rows * self.hyca.cols)
+        r, c = self.verifier.coord()
+        px, pw = self.injector.probe_operands(sweep, self.cfg.probe_window)
+        out = self.injector.corrupted_probe(px, pw)
+        ok, _ = self.verifier.check(px, pw, out)
+        if ok:
+            # complementary test vector (negated weights): flips the
+            # accumulator's sign, so a stuck-at in the high bits is visible
+            # whichever sign the first probe happened to produce (a stuck-at-1
+            # on bit 30 is a no-op on every small negative two's-complement
+            # accumulator).  Classic BIST pattern pairing.
+            out2 = self.injector.corrupted_probe(px, -pw)
+            expect2 = int(px[r].astype(np.int64) @ -pw[:, c].astype(np.int64))
+            ok = int(out2[r, c]) == expect2
+        self.scans += 1
+        if not ok and self.pe_state[r, c] in (HEALTHY, SUSPECT):
+            self.hits[r, c] += 1
+            if self.hits[r, c] >= self.cfg.confirm_hits:
+                self.pe_state[r, c] = CONFIRMED
+                self._confirm(r, c)
+            else:
+                self.pe_state[r, c] = SUSPECT
+        return ok, (r, c)
+
+    def boot_scan(self) -> int:
+        """Power-on sweep: up to ``max_boot_sweeps`` whole-array scans, early-
+        exit once a full sweep confirms nothing new.  Returns #confirmed."""
+        n_pe = self.hyca.rows * self.hyca.cols
+        for _ in range(self.cfg.max_boot_sweeps):
+            before = self.n_confirmed
+            suspects_before = int((self.pe_state == SUSPECT).sum())
+            for _ in range(n_pe):
+                self.scan_step()
+            grew = self.n_confirmed > before or int((self.pe_state == SUSPECT).sum()) > suspects_before
+            if not grew:
+                break
+        return self.n_confirmed
+
+    def bist(self) -> int:
+        """Built-in self test: trust the factory fault map (the paper's
+        repair path assumes a known FPT at power-on; runtime scanning exists
+        for faults that appear *after* that).  Confirms every current truth
+        fault directly."""
+        for r, c in self.injector.coords():
+            if self.pe_state[r, c] in (HEALTHY, SUSPECT):
+                self.pe_state[r, c] = CONFIRMED
+                self._confirm(r, c)
+        return self.n_confirmed

@@ -1,0 +1,151 @@
+"""N-replica fleet simulation: fault accumulation vs. fleet goodput.
+
+Each replica is a full :class:`~repro.serving.server.FaultTolerantServer`
+(they share one compiled :class:`~repro.serving.server.ModelBundle`, so XLA
+compiles the decode step once).  Faults accumulate per replica at a Poisson
+rate; a replica whose confirmed faults exceed DPPU capacity serves at reduced
+admission capacity, and a replica degraded to zero surviving columns is
+*retired* and replaced from a :class:`~repro.runtime.elastic.SparePool` —
+the HyCA flexible-pool insight applied one level up: a small global spare
+pool beats region-locked spares because ANY spare can cover ANY replica.
+
+``run_fleet`` reports fleet-level goodput (correct tokens per step, summed
+over replicas) so benchmarks/serving_goodput.py can sweep fault rate and plot
+the serving-layer analogue of the paper's Fig. 10.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.runtime.elastic import SparePool
+from repro.serving.fault_manager import FaultInjector
+from repro.serving.queue import Request
+from repro.serving.server import FaultTolerantServer, ModelBundle, ServerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    n_replicas: int = 4
+    n_spares: int = 2
+    spare_policy: str = "pool"     # "pool" | "region" (see runtime.elastic)
+    n_regions: int = 2
+    steps: int = 120
+    fault_rate: float = 0.0        # Poisson new faults / replica / step
+    request_rate: float = 0.5      # new requests / replica / step (fleet-wide Poisson)
+    prompt_len: int = 4
+    max_new_tokens: int = 8
+    retire_fraction: float = 0.25  # drain a replica at/below this capacity fraction
+    seed: int = 0
+    server: ServerConfig = dataclasses.field(
+        default_factory=lambda: ServerConfig(n_slots=2, smax=32, mode="protected")
+    )
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    server: FaultTolerantServer
+    region: int
+    retired_at: int | None = None
+    replaced: int = 0              # spares consumed by this replica position
+
+
+def _fresh_server(bundle: ModelBundle, cfg: FleetConfig, seed: int) -> FaultTolerantServer:
+    scfg = dataclasses.replace(cfg.server, fault_rate=cfg.fault_rate, seed=seed)
+    return FaultTolerantServer(
+        scfg, bundle=bundle,
+        injector=FaultInjector(scfg.rows, scfg.cols, seed=seed),
+    )
+
+
+def run_fleet(cfg: FleetConfig) -> dict:
+    rng = np.random.default_rng(cfg.seed)
+    bundle = ModelBundle(dataclasses.replace(cfg.server, fault_rate=cfg.fault_rate))
+    pool = SparePool(cfg.n_spares, policy=cfg.spare_policy, n_regions=cfg.n_regions)
+    replicas = [
+        ReplicaState(
+            server=_fresh_server(bundle, cfg, seed=cfg.seed * 1000 + i),
+            region=i % cfg.n_regions,
+        )
+        for i in range(cfg.n_replicas)
+    ]
+
+    vocab = bundle.lm.vocab
+    next_rid = 0
+    goodput_per_step: list[int] = []
+    alive_per_step: list[int] = []
+    retirements = 0
+    replacements = 0
+    requests_lost = 0
+
+    for step in range(cfg.steps):
+        # arrivals: least-loaded routing over live replicas
+        live = [r for r in replicas if r.retired_at is None]
+        n_new = int(rng.poisson(cfg.request_rate * max(len(live), 1)))
+        for _ in range(n_new):
+            if not live:
+                break
+            target = min(live, key=lambda r: r.server.queue.depth() + r.server.scheduler.active)
+            prompt = rng.integers(0, vocab, size=cfg.prompt_len).astype(np.int32)
+            target.server.queue.submit(Request(
+                rid=next_rid, prompt=prompt, max_new_tokens=cfg.max_new_tokens,
+                arrival_step=step,
+            ))
+            next_rid += 1
+
+        tokens = 0
+        for rep in replicas:
+            if rep.retired_at is not None:
+                continue
+            rep.server.step()
+            tokens += rep.server.scheduler.last_step_tokens
+            worn_out = rep.server.manager.capacity_fraction <= cfg.retire_fraction
+            if rep.server.retired or worn_out:
+                rep.retired_at = step
+                retirements += 1
+                # in-flight work dies with the replica; queued work survives
+                # iff a spare takes over and the requests are re-routed
+                requests_lost += rep.server.scheduler.active
+                stranded = rep.server.queue.drain_all()
+                if pool.try_allocate(rep.region):
+                    rep.server = _fresh_server(
+                        bundle, cfg, seed=cfg.seed * 1000 + 500 + replacements
+                    )
+                    for req in stranded:
+                        rep.server.queue.submit(req)
+                    rep.retired_at = None
+                    rep.replaced += 1
+                    replacements += 1
+                else:
+                    requests_lost += len(stranded)
+        goodput_per_step.append(tokens)
+        alive_per_step.append(sum(r.retired_at is None for r in replicas))
+
+    for rep in replicas:
+        rep.server.metrics.finish()
+
+    return {
+        "steps": cfg.steps,
+        "fault_rate": cfg.fault_rate,
+        "spare_policy": cfg.spare_policy,
+        "goodput_tokens": int(np.sum(goodput_per_step)),
+        "goodput_per_step": float(np.mean(goodput_per_step)),
+        "alive_final": alive_per_step[-1] if alive_per_step else cfg.n_replicas,
+        "alive_mean": float(np.mean(alive_per_step)) if alive_per_step else float(cfg.n_replicas),
+        "retirements": retirements,
+        "replacements": replacements,
+        "requests_lost": requests_lost,
+        "spares_remaining": pool.remaining,
+        "replica_summaries": [
+            {
+                "region": r.region,
+                "retired_at": r.retired_at,
+                "replaced": r.replaced,
+                "true_faults": r.server.injector.n_faults,
+                "confirmed": r.server.manager.n_confirmed,
+                "surviving_cols": r.server.manager.surviving_cols,
+            }
+            for r in replicas
+        ],
+    }

@@ -1,0 +1,107 @@
+"""Per-step serving telemetry + aggregate summary.
+
+One :class:`StepRecord` per server step, one completion record per finished
+request.  ``summary()`` folds them into the numbers the benchmarks plot:
+throughput (tokens/s wall and tokens/step), goodput (tokens of requests that
+finished successfully — and, when the caller supplies a reference, that also
+*match* the fault-free run), time-to-first-token percentiles, queue depth,
+scan coverage, and the degraded-capacity timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.serving.queue import CompletedRequest
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    active_slots: int
+    effective_slots: int
+    queue_depth: int
+    tokens_generated: int          # decode tokens sampled into outputs this step
+    confirmed_faults: int
+    true_faults: int
+    surviving_cols: int
+    scan_ok: bool | None           # None when no scan ran this step
+    completed: int
+
+
+class ServingMetrics:
+    def __init__(self, n_slots: int, rows: int, cols: int):
+        self.n_slots = n_slots
+        self.rows, self.cols = rows, cols
+        self.steps: list[StepRecord] = []
+        self.completions: list[CompletedRequest] = []
+        self._t0 = time.perf_counter()
+        self._wall: float | None = None
+
+    def record_step(self, rec: StepRecord, completed: list[CompletedRequest]) -> None:
+        self.steps.append(rec)
+        self.completions.extend(completed)
+
+    def finish(self) -> None:
+        self._wall = time.perf_counter() - self._t0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def wall_s(self) -> float:
+        return self._wall if self._wall is not None else (time.perf_counter() - self._t0)
+
+    def goodput_tokens(self, reference: dict[int, np.ndarray] | None = None) -> int:
+        """Tokens from successfully completed requests.  With a ``reference``
+        map (rid -> fault-free token stream), only requests whose output
+        matches bit-for-bit count — wrong-but-delivered tokens are not
+        goodput."""
+        total = 0
+        for c in self.completions:
+            if not c.ok:
+                continue
+            if reference is not None:
+                ref = reference.get(c.rid)
+                if ref is None or len(ref) != len(c.tokens) or not np.array_equal(ref, c.tokens):
+                    continue
+            total += int(len(c.tokens))
+        return total
+
+    def ttft_steps(self) -> list[int]:
+        return [
+            c.first_token_step - c.arrival_step
+            for c in self.completions
+            if c.first_token_step is not None
+        ]
+
+    def summary(self, reference: dict[int, np.ndarray] | None = None) -> dict:
+        n_steps = len(self.steps)
+        toks = sum(r.tokens_generated for r in self.steps)
+        good = self.goodput_tokens(reference)
+        ttft = self.ttft_steps()
+        scans = [r for r in self.steps if r.scan_ok is not None]
+        n_pe_scans = len(scans)
+        sweep = max(self.rows * self.cols, 1)
+        ok = [c for c in self.completions if c.ok]
+        return {
+            "steps": n_steps,
+            "wall_s": self.wall_s,
+            "tokens": toks,
+            "tokens_per_step": toks / max(n_steps, 1),
+            "tokens_per_s": toks / max(self.wall_s, 1e-9),
+            "goodput_tokens": good,
+            "goodput_per_step": good / max(n_steps, 1),
+            "requests_completed": len(ok),
+            "requests_failed": len(self.completions) - len(ok),
+            "ttft_mean_steps": float(np.mean(ttft)) if ttft else None,
+            "ttft_p95_steps": float(np.percentile(ttft, 95)) if ttft else None,
+            "queue_depth_mean": float(np.mean([r.queue_depth for r in self.steps])) if self.steps else 0.0,
+            "scan_steps": n_pe_scans,
+            "scan_sweeps": n_pe_scans / sweep,
+            "confirmed_faults_final": self.steps[-1].confirmed_faults if self.steps else 0,
+            "true_faults_final": self.steps[-1].true_faults if self.steps else 0,
+            "surviving_cols_final": self.steps[-1].surviving_cols if self.steps else self.cols,
+            "effective_slots_min": min((r.effective_slots for r in self.steps), default=self.n_slots),
+            "effective_slots_final": self.steps[-1].effective_slots if self.steps else self.n_slots,
+        }

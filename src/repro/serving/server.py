@@ -1,0 +1,300 @@
+"""Fault-tolerant continuous-batching inference server.
+
+The step loop wires the scheduler and fault manager around one jitted decode:
+
+    every step:
+      1. hardware wearout      — the injector may grow the fault map;
+      2. one scan step         — the fault manager probes one PE (IV-D);
+      3. capacity update       — confirmed faults beyond DPPU capacity shrink
+                                 the surviving column prefix, and with it the
+                                 number of decode slots admission may fill;
+      4. admission             — freed slots take queued requests (their KV
+                                 cache slots are zeroed in place);
+      5. batched decode        — ONE decode_step over all slots; every FFN
+                                 matmul of the protected layer fraction runs
+                                 through the HyCA virtual array
+                                 (engine.hyca_matmul), corrupted by whatever
+                                 faults the runtime has not yet confirmed;
+      6. commit                — prefill slots advance a prompt token, decode
+                                 slots append the sampled token, finished
+                                 requests free their slots.
+
+Mode is a *data* difference, not a code difference — all three modes run the
+identical compiled step, fed different fault views:
+
+  * ``off``          — empty fault state (the reference run);
+  * ``protected``    — truth minus confirmed (confirmed faults are DPPU-
+                       repaired or column-remapped, hence clean);
+  * ``unprotected``  — the full truth (no detection, no repair: Fig. 2's
+                       accuracy collapse, here a goodput collapse).
+
+That makes the paper's headline claim testable end-to-end: with every fault
+confirmed (BIST) and #faults ≤ capacity, ``protected`` serves tokens
+bit-exact with ``off``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.engine import FaultState, HyCAConfig, hyca_matmul
+from repro.core.redundancy import DPPUConfig
+from repro.models.lm import LMConfig, decode_step, init_cache, init_params
+from repro.serving.fault_manager import FaultInjector, FaultManager, FaultManagerConfig
+from repro.serving.metrics import ServingMetrics, StepRecord
+from repro.serving.queue import CompletedRequest, Request, RequestQueue
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    arch: str = "qwen1.5-0.5b"
+    n_slots: int = 4
+    smax: int = 96                 # KV capacity per slot
+    mode: str = "protected"        # off | protected | unprotected
+    rows: int = 8                  # virtual PE array (serving-scale)
+    cols: int = 8
+    dppu_size: int = 4             # DPPU capacity ~= repairable faults
+    protect_fraction: float = 1.0  # fraction of main-stack layers on the array
+    confirm_hits: int = 2
+    bist: bool = True              # power-on: confirm the factory fault map
+    boot_scan: bool = False        # probe-based power-on sweep instead
+    fault_rate: float = 0.0        # Poisson new faults per step (wearout)
+    seed: int = 0
+
+    def hyca(self) -> HyCAConfig:
+        # mode is fixed "unprotected": the *fault state fed per step* encodes
+        # off/protected/unprotected, so all modes share one compiled step.
+        return HyCAConfig(
+            rows=self.rows, cols=self.cols,
+            dppu=DPPUConfig(size=self.dppu_size, group_size=min(8, self.dppu_size)),
+            mode="unprotected",
+        )
+
+
+# --------------------------------------------------------------------------- #
+# compiled pieces (shareable across fleet replicas)
+# --------------------------------------------------------------------------- #
+class ModelBundle:
+    """Params + jitted step/reset for one (arch, n_slots, smax, hyca) shape.
+    Fleet replicas share a bundle so XLA compiles the step exactly once."""
+
+    def __init__(self, cfg: ServerConfig, lm: LMConfig | None = None):
+        self.cfg = cfg
+        self.lm = lm or get_smoke_config(cfg.arch)
+        self.hyca = cfg.hyca()
+        self.params = init_params(jax.random.key(cfg.seed), self.lm)
+        n_main = self.lm.n_layers - self.lm.first_k_dense
+        k = int(np.ceil(cfg.protect_fraction * n_main))
+        self.protect_mask = jnp.asarray(np.arange(n_main) < k)
+        self.max_faults = cfg.rows * cfg.cols
+        self.empty_state = FaultState(
+            jnp.full((self.max_faults, 2), -1, jnp.int32),
+            jnp.zeros(self.max_faults, jnp.int32),
+            jnp.zeros(self.max_faults, jnp.int32),
+        )
+
+        lmc, hyca, mask = self.lm, self.hyca, self.protect_mask
+
+        def array_dot(fstate):
+            def d(a, b):
+                out = hyca_matmul(a.reshape(-1, a.shape[-1]), b, fstate, cfg=hyca)
+                return out.reshape(*a.shape[:-1], b.shape[-1]).astype(a.dtype)
+            return d
+
+        def _step(params, cache, tok, fstate):
+            return decode_step(
+                params, lmc, cache, {"token": tok},
+                dot=array_dot(fstate), protect_mask=mask,
+            )
+
+        def _reset(cache, slot):
+            def f(path, leaf):
+                name = str(getattr(path[-1], "key", path[-1]))
+                if name == "enc":
+                    return leaf.at[slot].set(jnp.zeros_like(leaf[0]))
+                return leaf.at[:, slot].set(jnp.zeros_like(leaf[:, 0]))
+            return jax.tree_util.tree_map_with_path(f, cache)
+
+        self.step_fn = jax.jit(_step, donate_argnums=(1,))
+        self.reset_fn = jax.jit(_reset, donate_argnums=(0,))
+
+    def fresh_cache(self) -> Any:
+        return init_cache(self.lm, self.cfg.n_slots, self.cfg.smax)
+
+
+# --------------------------------------------------------------------------- #
+# the server
+# --------------------------------------------------------------------------- #
+class FaultTolerantServer:
+    def __init__(self, cfg: ServerConfig, *, bundle: ModelBundle | None = None,
+                 injector: FaultInjector | None = None):
+        if cfg.mode not in ("off", "protected", "unprotected"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        self.cfg = cfg
+        self.bundle = bundle or ModelBundle(cfg)
+        self.lm = self.bundle.lm
+        self.cache = self.bundle.fresh_cache()
+        self.injector = injector or FaultInjector(cfg.rows, cfg.cols, seed=cfg.seed + 1)
+        self.manager = FaultManager(
+            self.bundle.hyca, self.injector,
+            FaultManagerConfig(confirm_hits=cfg.confirm_hits),
+        )
+        self.queue = RequestQueue()
+        self.scheduler = ContinuousBatchingScheduler(cfg.n_slots, cfg.smax)
+        self.metrics = ServingMetrics(cfg.n_slots, cfg.rows, cfg.cols)
+        self.step_idx = 0
+        self._next_rid = 0
+        self._fstate_key: tuple[int, int] | None = None
+        self._fstate = self.bundle.empty_state
+        if cfg.mode == "protected":
+            if cfg.bist:
+                self.manager.bist()
+            elif cfg.boot_scan:
+                self.manager.boot_scan()
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt, max_new_tokens: int, *, deadline_step: int | None = None,
+               eos_id: int | None = None, arrival_step: int | None = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.submit(Request(
+            rid=rid, prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens,
+            arrival_step=self.step_idx if arrival_step is None else arrival_step,
+            deadline_step=deadline_step, eos_id=eos_id,
+        ))
+        return rid
+
+    @property
+    def retired(self) -> bool:
+        """Degraded to zero surviving columns — the replica cannot serve."""
+        return self.cfg.mode == "protected" and self.manager.surviving_cols == 0
+
+    def _current_fstate(self) -> FaultState:
+        if self.cfg.mode == "off":
+            return self.bundle.empty_state
+        key = (self.injector.version, self.manager.n_confirmed)
+        if key != self._fstate_key:
+            exclude = (
+                self.manager.confirmed_coords()
+                if self.cfg.mode == "protected" else frozenset()
+            )
+            self._fstate = self.injector.fault_state(
+                exclude=exclude, max_faults=self.bundle.max_faults
+            )
+            self._fstate_key = key
+        return self._fstate
+
+    def _effective_slots(self) -> int:
+        if self.cfg.mode != "protected":
+            return self.cfg.n_slots
+        frac = self.manager.capacity_fraction
+        if frac >= 1.0:
+            return self.cfg.n_slots
+        if self.manager.surviving_cols == 0:
+            return 0
+        return max(1, int(np.floor(self.cfg.n_slots * frac)))
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> list[CompletedRequest]:
+        cfg = self.cfg
+        step = self.step_idx
+        completed: list[CompletedRequest] = []
+
+        # 1. hardware wearout
+        if cfg.mode != "off" and cfg.fault_rate > 0:
+            self.injector.step(cfg.fault_rate)
+
+        # 2. one online-verifier scan step per decode step
+        scan_ok: bool | None = None
+        if cfg.mode == "protected":
+            scan_ok, _ = self.manager.scan_step()
+
+        # 3. degraded capacity -> admission limit
+        eff = self._effective_slots()
+        self.scheduler.set_effective_slots(eff)
+
+        # 4. admission into freed slots (reset their KV cache slots)
+        admitted, rejected = self.scheduler.admit(self.queue, step)
+        completed.extend(rejected)
+        for req in self.queue.drained_expired():
+            completed.append(CompletedRequest(
+                rid=req.rid, tokens=np.zeros(0, np.int32), prompt_len=req.prompt_len,
+                arrival_step=req.arrival_step, admitted_step=None,
+                first_token_step=None, finish_step=step, reason="expired",
+            ))
+        for slot in admitted:
+            self.cache = self.bundle.reset_fn(self.cache, jnp.int32(slot.index))
+
+        # 5. one batched decode over all slots
+        feed = self.scheduler.plan_feed()
+        logits, self.cache = self.bundle.step_fn(
+            self.bundle.params, self.cache, jnp.asarray(feed), self._current_fstate()
+        )
+        sampled = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+
+        # 6. advance requests
+        n_active = self.scheduler.active
+        done = self.scheduler.commit(sampled, step)
+        completed.extend(done)
+        n_decode_tokens = self.scheduler.last_step_tokens
+
+        self.metrics.record_step(StepRecord(
+            step=step,
+            active_slots=n_active,
+            effective_slots=eff,
+            queue_depth=self.queue.depth(),
+            tokens_generated=int(n_decode_tokens),
+            confirmed_faults=self.manager.n_confirmed,
+            true_faults=self.injector.n_faults,
+            surviving_cols=self.manager.surviving_cols,
+            scan_ok=scan_ok,
+            completed=len(completed),
+        ), completed)
+        self.step_idx += 1
+        return completed
+
+    # ------------------------------------------------------------------ #
+    def run(self, trace: list[dict] | None = None, *, max_steps: int = 256,
+            drain: bool = True) -> dict:
+        """Drive the server over a request trace.
+
+        ``trace``: list of {"step", "prompt", "max_new_tokens", ...} dicts;
+        requests are submitted when the loop reaches their arrival step.
+        Runs until the trace is exhausted and all work is done (or
+        ``max_steps``).  Returns the metrics summary.
+        """
+        trace = sorted(trace or [], key=lambda t: t.get("step", 0))
+        ti = 0
+        while self.step_idx < max_steps:
+            while ti < len(trace) and trace[ti].get("step", 0) <= self.step_idx:
+                t = trace[ti]
+                self.submit(
+                    t["prompt"], t["max_new_tokens"],
+                    deadline_step=t.get("deadline_step"), eos_id=t.get("eos_id"),
+                )
+                ti += 1
+            self.step()
+            no_work = ti >= len(trace) and self.queue.depth() == 0 and self.scheduler.active == 0
+            if no_work or (self.retired and self.scheduler.active == 0):
+                break
+        if drain:
+            self.metrics.completions.extend(self.scheduler.drain(self.step_idx))
+            # never-admitted requests count as failures, not silence
+            for req in self.queue.drain_all():
+                self.metrics.completions.append(CompletedRequest(
+                    rid=req.rid, tokens=np.zeros(0, np.int32), prompt_len=req.prompt_len,
+                    arrival_step=req.arrival_step, admitted_step=None,
+                    first_token_step=None, finish_step=self.step_idx, reason="dropped",
+                ))
+        self.metrics.finish()
+        return self.metrics.summary()
+
+    def completions_by_rid(self) -> dict[int, np.ndarray]:
+        return {c.rid: c.tokens for c in self.metrics.completions if c.ok}

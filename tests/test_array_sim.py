@@ -1,5 +1,6 @@
 """Cycle-level dataflow schedule invariants (paper Section IV-B, Fig. 5)."""
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.array_sim import (

@@ -4,6 +4,7 @@ import os
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.store import CheckpointManager, latest_step, restore, save

@@ -3,15 +3,24 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.array_sim import ConvLayer, layer_cycles
 from repro.core.detection import (
     clb_bytes,
     coverage,
     detection_cycles,
+    layer_covered,
     scan_array,
     scans_to_full_detection,
 )
-from repro.core.engine import FaultState, HyCAConfig, hyca_matmul
+from repro.core.engine import (
+    FaultState,
+    HyCAConfig,
+    fault_state_from_map,
+    hyca_matmul,
+    surviving_columns,
+)
 from repro.core.perf_model import NETWORKS
+from repro.core.redundancy import DPPUConfig
 from repro.runtime.online_verify import OnlineVerifier, append_fault
 
 
@@ -42,6 +51,62 @@ def test_partial_visibility_needs_rescans(rng):
 def test_coverage_structure():
     cov, tot = coverage(NETWORKS["vgg16"], 32, 32)
     assert cov == tot == 16
+
+
+def test_coverage_edge_cases():
+    assert coverage([], 32, 32) == (0, 0)  # no layers, no coverage to claim
+    rows = cols = 8
+    need = detection_cycles(rows, cols)  # 72
+    # a layer whose compute time EXACTLY equals the scan time is covered
+    # (layer_covered uses <=): solve iters * (t_it + 2R + C - 2) == need
+    boundary = ConvLayer(c_in=need // 1 - (2 * rows + cols - 2), k=1, out_pixels=1, c_out=rows)
+    assert layer_cycles(boundary, rows, cols) == need
+    assert layer_covered(boundary, rows, cols)
+    # one cycle shorter -> not covered
+    short = ConvLayer(c_in=boundary.c_in - 1, k=1, out_pixels=1, c_out=rows)
+    assert layer_cycles(short, rows, cols) == need - 1
+    assert not layer_covered(short, rows, cols)
+    cov, tot = coverage([boundary, short], rows, cols)
+    assert (cov, tot) == (1, 2)
+
+
+# --------------------------------------------------------------------------- #
+# surviving_columns — column-prefix degradation edge cases
+# --------------------------------------------------------------------------- #
+def _cfg_cap4(rows=8, cols=8):
+    cfg = HyCAConfig(rows=rows, cols=cols, dppu=DPPUConfig(size=4, group_size=4))
+    assert cfg.capacity == 4
+    return cfg
+
+
+def test_surviving_columns_zero_faults():
+    cfg = _cfg_cap4()
+    state = fault_state_from_map(np.zeros((8, 8), bool), max_faults=4)
+    assert surviving_columns(state, cfg) == cfg.cols
+
+
+def test_surviving_columns_exactly_at_capacity():
+    cfg = _cfg_cap4()
+    fmap = np.zeros((8, 8), bool)
+    for r, c in [(0, 1), (2, 3), (4, 5), (6, 7)]:  # 4 faults == capacity
+        fmap[r, c] = True
+    state = fault_state_from_map(fmap)
+    assert surviving_columns(state, cfg) == cfg.cols  # fully repaired
+
+
+def test_surviving_columns_capacity_plus_one():
+    cfg = _cfg_cap4()
+    fmap = np.zeros((8, 8), bool)
+    for r, c in [(0, 0), (1, 1), (2, 2), (3, 3), (4, 6)]:  # 5th-leftmost at col 6
+        fmap[r, c] = True
+    state = fault_state_from_map(fmap)
+    # leftmost-first repair: cols 0..3 repaired, the col-6 fault bounds the prefix
+    assert surviving_columns(state, cfg) == 6
+    # a fault in column 0 beyond capacity collapses the prefix entirely
+    fmap0 = np.zeros((8, 8), bool)
+    for r in range(5):
+        fmap0[r, 0] = True
+    assert surviving_columns(fault_state_from_map(fmap0), cfg) == 0
 
 
 # --------------------------------------------------------------------------- #

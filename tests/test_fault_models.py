@@ -1,6 +1,7 @@
 """Fault-model unit + property tests (paper Eq. 1, Section V-A2)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fault_models as fm

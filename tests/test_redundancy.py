@@ -1,6 +1,7 @@
 """RR/CR/DR/HyCA repair algorithms — unit + property tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import redundancy as red

@@ -7,6 +7,7 @@ CPU device grid is enough — Mesh axes/sizes are what the resolver consumes.
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
