@@ -1,0 +1,153 @@
+"""FTContext dispatch-layer overhead: protected vs. off decode steps.
+
+Measures the per-step cost of routing every protected-site matmul through
+the fault-aware dispatcher, across three representative families (dense /
+MoE / SSM), for each dispatch mode that runs on this backend:
+
+  * ``off``     — ftc=None, the production plain-matmul path (baseline);
+  * ``twopass`` — engine.hyca_matmul (corrupt + DPPU overwrite, pure jnp);
+  * ``fused``   — the fused dispatch (Pallas kernel on TPU; on CPU the
+                  element-granular jnp fallback chosen at context build).
+
+The CI smoke job runs this per-PR (``--quick``) and archives
+experiments/bench/ft_overhead.json, so dispatch-layer perf regressions —
+e.g. reintroducing a both-branches gate like the old ``_gated_dot`` — show
+up as an overhead-ratio jump rather than silently shipping.
+
+Claims checked: protected-mode steps produce logits bit-exact with the same
+compiled step on a fault-free array while faults <= capacity (the overhead
+being measured buys correctness), and the overhead ratio stays
+finite/positive (harness sanity).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Claims, save_result
+from repro.configs import get_smoke_config
+from repro.core.engine import HyCAConfig, empty_fault_state, fault_state_from_map
+from repro.core.ftcontext import build_ftcontext
+from repro.core.redundancy import DPPUConfig
+from repro.models.lm import decode_step, init_cache, init_params
+
+FAMILIES = ["qwen1.5-0.5b", "deepseek-moe-16b", "rwkv6-7b"]
+ROWS = COLS = 8
+DPPU = 8
+N_FAULTS = 4
+
+
+def _bench_arch(arch: str, *, n_slots: int, smax: int, steps: int, claims: Claims) -> dict:
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    fmap = np.zeros((ROWS, COLS), bool)
+    fmap.reshape(-1)[rng.choice(ROWS * COLS, size=N_FAULTS, replace=False)] = True
+    state = fault_state_from_map(fmap, max_faults=N_FAULTS, rng=rng)
+    hyca = HyCAConfig(
+        rows=ROWS, cols=COLS, dppu=DPPUConfig(size=DPPU, group_size=DPPU),
+        mode="protected",
+    )
+
+    contexts = {
+        "off": None,
+        "twopass": build_ftcontext(state, hyca, dispatch="twopass"),
+        "fused": build_ftcontext(state, hyca, dispatch="fused"),
+    }
+
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (n_slots, 1)), jnp.int32)
+    empty = empty_fault_state(N_FAULTS)
+    result: dict = {"arch": arch}
+    exact = {}
+    for name, ftc in contexts.items():
+        if ftc is None:
+            step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, {"token": t}))
+        else:
+            # fault table as a traced argument: the timed protected run and
+            # the fault-free reference share one compiled program (mode is
+            # a data difference — the serving-layer design)
+            step = jax.jit(
+                lambda p, c, t, fs, ftc=ftc: decode_step(
+                    p, cfg, c, {"token": t}, ftc=ftc.with_state(fs)
+                )
+            )
+        cache = init_cache(cfg, n_slots, smax)
+        args = (tok,) if ftc is None else (tok, state)
+        lg, cache = step(params, cache, *args)         # compile + warmup
+        jax.block_until_ready(lg)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            lg, cache = step(params, cache, *args)
+        jax.block_until_ready(lg)
+        ms = (time.perf_counter() - t0) / steps * 1e3
+        result[f"{name}_ms_per_step"] = round(ms, 3)
+        if ftc is not None:
+            # bit-exactness: protected vs the fault-free array, same program
+            cache_p = init_cache(cfg, n_slots, smax)
+            lg_p, _ = step(params, cache_p, tok, state)
+            cache_e = init_cache(cfg, n_slots, smax)
+            lg_e, _ = step(params, cache_e, tok, empty)
+            exact[name] = bool(
+                np.array_equal(np.asarray(lg_p, np.float32), np.asarray(lg_e, np.float32))
+            )
+
+    for name in ("twopass", "fused"):
+        result[f"{name}_overhead_x"] = round(
+            result[f"{name}_ms_per_step"] / max(result["off_ms_per_step"], 1e-9), 3
+        )
+        claims.check(
+            f"{arch}: {name} protected logits bit-exact with fault-free run (faults <= capacity)",
+            exact[name],
+        )
+        claims.check(
+            f"{arch}: {name} overhead ratio finite and positive",
+            0 < result[f"{name}_overhead_x"] < float("inf"),
+            f"{result[f'{name}_overhead_x']}x",
+        )
+    return result
+
+
+def run(quick: bool = False) -> dict:
+    steps = 8 if quick else 32
+    claims = Claims("ft_overhead")
+    # KV capacity must cover warmup + every timed step: a decode at
+    # idx == smax would be silently dropped by JAX OOB scatter semantics
+    # and the tail of the timed loop would no longer measure a real decode
+    per_arch = [
+        _bench_arch(a, n_slots=4, smax=steps + 8, steps=steps, claims=claims)
+        for a in FAMILIES
+    ]
+    return {
+        "backend": jax.default_backend(),
+        "steps": steps,
+        "rows": ROWS, "cols": COLS, "dppu": DPPU, "n_faults": N_FAULTS,
+        "results": per_arch,
+        "claims": claims.items,
+        "all_ok": claims.all_ok,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="fewer timed steps (CI smoke)")
+    args = ap.parse_args(argv)
+    t0 = time.perf_counter()
+    out = run(quick=args.quick)
+    out["elapsed_s"] = round(time.perf_counter() - t0, 2)
+    path = save_result("ft_overhead", out)
+    for r in out["results"]:
+        print(
+            f"[ft_overhead] {r['arch']:>18}: off {r['off_ms_per_step']:7.2f} ms  "
+            f"twopass {r['twopass_ms_per_step']:7.2f} ms ({r['twopass_overhead_x']}x)  "
+            f"fused {r['fused_ms_per_step']:7.2f} ms ({r['fused_overhead_x']}x)"
+        )
+    print(f"[ft_overhead] wrote {path} ({out['elapsed_s']}s)")
+    return 0 if out["all_ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,7 @@ def main(argv=None) -> int:
     from benchmarks import (
         cluster_ffp,
         fig02_accuracy_vs_per,
+        ft_overhead,
         fig03_motivation_ffp,
         fig09_area,
         fig10_ffp,
@@ -46,6 +47,7 @@ def main(argv=None) -> int:
         "tab01_detection": tab01_detection.run,
         "cluster_ffp": cluster_ffp.run,
         "serving_goodput": serving_goodput.run,
+        "ft_overhead": ft_overhead.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -9,15 +9,33 @@ Layers:
   * area          — component-count chip-area model
   * perf_model    — Scale-sim-like network runtime model + CNN layer tables
   * engine        — HyCAEngine: fault-tolerant matmul for LM layers
+  * ftcontext     — FTContext: the unified fault-aware execution layer the
+                    model stack dispatches every weight matmul through
 """
-from repro.core.engine import FaultState, HyCAConfig, fault_state_from_map, hyca_matmul
+from repro.core.engine import (
+    FaultState,
+    HyCAConfig,
+    empty_fault_state,
+    fault_state_from_map,
+    hyca_matmul,
+    repaired_grid,
+    validate_fault_state,
+)
+from repro.core.ftcontext import FTContext, ProtectPolicy, build_ftcontext, site_matmul
 from repro.core.redundancy import DPPUConfig, SCHEMES, repair
 
 __all__ = [
     "FaultState",
     "HyCAConfig",
+    "FTContext",
+    "ProtectPolicy",
+    "build_ftcontext",
+    "site_matmul",
+    "empty_fault_state",
     "fault_state_from_map",
     "hyca_matmul",
+    "repaired_grid",
+    "validate_fault_state",
     "DPPUConfig",
     "SCHEMES",
     "repair",

@@ -78,6 +78,46 @@ class FaultState:
         return self.fpt.shape[0]
 
 
+def validate_fault_state(state: FaultState, rows: int, cols: int) -> FaultState:
+    """Host-side FPT bounds check against the (rows, cols) array geometry.
+
+    The engine maps outputs onto PEs with ``%`` indexing and scatters the FPT
+    into dense grids — an out-of-range FPT entry would silently wrap around
+    (or be dropped by the scatter) instead of failing.  Call this wherever a
+    concrete fault table meets a concrete array config; traced states (inside
+    jit) are returned unchecked — validate them at context build instead.
+    """
+    if isinstance(state.fpt, jax.core.Tracer):
+        return state
+    fpt = np.asarray(state.fpt)
+    if fpt.ndim != 2 or fpt.shape[1] != 2:
+        raise ValueError(f"FPT must be (max_faults, 2), got shape {fpt.shape}")
+    valid = fpt[:, 0] >= 0
+    bad = valid & (
+        (fpt[:, 0] >= rows) | (fpt[:, 1] < 0) | (fpt[:, 1] >= cols)
+    )
+    if bad.any():
+        entries = [tuple(int(v) for v in e) for e in fpt[bad][:8]]
+        raise ValueError(
+            f"FPT entries {entries} out of bounds for the {rows}x{cols} PE "
+            f"array; fault coordinates must satisfy 0 <= row < {rows} and "
+            f"0 <= col < {cols} (padding entries use row == col == -1)"
+        )
+    return state
+
+
+def empty_fault_state(max_faults: int = 1) -> FaultState:
+    """All-padding FPT: the fault-free array.  Feeding this to a protected
+    context yields the reference ("off") run through the *identical* compiled
+    step — mode is a data difference, so bit-exactness comparisons are
+    structural, not at the mercy of XLA fusion choices."""
+    return FaultState(
+        jnp.full((max_faults, 2), -1, jnp.int32),
+        jnp.zeros(max_faults, jnp.int32),
+        jnp.zeros(max_faults, jnp.int32),
+    )
+
+
 def fault_state_from_map(
     fault_map: np.ndarray,
     *,
@@ -138,7 +178,57 @@ def _pe_grids(state: FaultState, rows: int, cols: int) -> tuple[jax.Array, jax.A
     return bit, val, faulty
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_repair"))
+def repaired_grid(state: FaultState, rows: int, cols: int, n_repair: int) -> jax.Array:
+    """Dense (rows, cols) bool grid of DPPU-repaired PEs: the first
+    ``n_repair`` valid FPT entries (the FPT is leftmost-sorted)."""
+    repaired = jnp.zeros((rows, cols), bool)
+    k = min(max(n_repair, 0), state.max_faults)
+    if k == 0:
+        return repaired
+    valid = state.fpt[:k, 0] >= 0
+    r = jnp.where(valid, state.fpt[:k, 0], 0)
+    c = jnp.where(valid, state.fpt[:k, 1], 0)
+    return repaired.at[r, c].set(valid)
+
+
+# inline=True: when traced inside an outer jit/scan the protected matmul
+# must not introduce an XLA call boundary — a separate subcomputation can pick
+# a different dot strategy than the surrounding graph's plain matmuls, which
+# breaks the bit-exact protected==off invariant by one ulp.
+@functools.partial(jax.jit, inline=True, static_argnames=("cfg", "n_repair"))
+def _hyca_matmul_impl(
+    x: jax.Array,
+    w: jax.Array,
+    state: FaultState | None,
+    *,
+    cfg: HyCAConfig,
+    n_repair: int | None = None,
+) -> jax.Array:
+    # The matmul runs in the caller's layout (N-D x supported): the clean
+    # accumulate must lower to the *same* XLA dot as the unprotected path so
+    # the protected==off invariant is bit-exact — reshaping x first can pick
+    # a different accumulation order.  Fault semantics apply to the flattened
+    # (M, N) output view (row = flattened leading index).
+    out = jnp.matmul(x, w, preferred_element_type=jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32)
+    if cfg.mode == "off" or state is None:
+        return out
+    shape = out.shape
+    out2 = out.reshape(-1, shape[-1])
+    bit, val, faulty = _pe_grids(state, cfg.rows, cfg.cols)
+    corrupted = _corrupt(out2, bit, val, faulty)
+    if cfg.mode == "unprotected":
+        return corrupted.astype(out.dtype).reshape(shape)
+    # protected: DPPU recompute of the first n_repair FPT entries.  The DPPU
+    # can never repair more faults than it has capacity for, whatever the
+    # caller asks — an unclamped n_repair would overstate protection.
+    k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults, cfg.capacity)
+    repaired_mask = repaired_grid(state, cfg.rows, cfg.cols, k)
+    m, n = out2.shape
+    ri = repaired_mask[jnp.arange(m)[:, None] % cfg.rows, jnp.arange(n)[None, :] % cfg.cols]
+    # DPPU overwrite: recomputed (correct) value wherever repaired.
+    return jnp.where(ri, out2, corrupted).astype(out.dtype).reshape(shape)
+
+
 def hyca_matmul(
     x: jax.Array,
     w: jax.Array,
@@ -147,31 +237,18 @@ def hyca_matmul(
     cfg: HyCAConfig,
     n_repair: int | None = None,
 ) -> jax.Array:
-    """x: (M, K) @ w: (K, N) through the HyCA-protected virtual array.
+    """x: (..., K) @ w: (K, N) through the HyCA-protected virtual array
+    (fault semantics on the flattened (M, N) output view).
 
     ``n_repair``: how many FPT entries the DPPU repairs (defaults to all
     entries up to DPPU capacity; the FPT is already leftmost-sorted).
+
+    Concrete (host-built) fault tables are bounds-checked against the array
+    geometry here; traced ones are assumed validated at FTContext build.
     """
-    out = jnp.matmul(x, w, preferred_element_type=jnp.float32 if not jnp.issubdtype(x.dtype, jnp.integer) else jnp.int32)
-    if cfg.mode == "off" or state is None:
-        return out
-    bit, val, faulty = _pe_grids(state, cfg.rows, cfg.cols)
-    corrupted = _corrupt(out, bit, val, faulty)
-    if cfg.mode == "unprotected":
-        return corrupted.astype(out.dtype)
-    # protected: DPPU recompute of the first n_repair FPT entries.  The DPPU
-    # can never repair more faults than it has capacity for, whatever the
-    # caller asks — an unclamped n_repair would overstate protection.
-    k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults, cfg.capacity)
-    repaired_mask = jnp.zeros((cfg.rows, cfg.cols), bool)
-    valid = state.fpt[:k, 0] >= 0
-    r = jnp.where(valid, state.fpt[:k, 0], 0)
-    c = jnp.where(valid, state.fpt[:k, 1], 0)
-    repaired_mask = repaired_mask.at[r, c].set(valid)
-    m, n = out.shape
-    ri = repaired_mask[jnp.arange(m)[:, None] % cfg.rows, jnp.arange(n)[None, :] % cfg.cols]
-    # DPPU overwrite: recomputed (correct) value wherever repaired.
-    return jnp.where(ri, out, corrupted).astype(out.dtype)
+    if state is not None:
+        validate_fault_state(state, cfg.rows, cfg.cols)
+    return _hyca_matmul_impl(x, w, state, cfg=cfg, n_repair=n_repair)
 
 
 def surviving_columns(state: FaultState, cfg: HyCAConfig) -> int:

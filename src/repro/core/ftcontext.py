@@ -1,0 +1,279 @@
+"""FTContext — the unified fault-aware execution layer.
+
+Replaces the ad-hoc ``dot: Callable`` / ``protect_mask`` injection that used
+to be threaded through every model-family signature.  One pytree object
+carries the whole fault-tolerance story:
+
+  * the device-resident :class:`~repro.core.engine.FaultState` (a traced
+    leaf, so fault tables update without recompiles);
+  * the :class:`~repro.core.engine.HyCAConfig` (virtual array geometry, DPPU
+    capacity, off/protected/unprotected mode) — static;
+  * a :class:`ProtectPolicy` naming which call *sites* (attention
+    projections, FFN, MoE experts, SSM projections, LM head, …) run on the
+    protected array and which fraction of main-stack layers is protected —
+    static, so unprotected sites/layers lower to a plain ``jnp.matmul`` and
+    pay **zero** overhead (the old ``jnp.where(flag, dot(a,b), matmul(a,b))``
+    gate evaluated both branches);
+  * the dispatch decision (plain / two-pass DPPU / fused Pallas kernel) plus
+    the fused backend (compiled TPU kernel, interpret mode, or the pure-jnp
+    oracle), chosen **once** at context build — never per call.
+
+Models receive an optional ``ftc`` and route every weight matmul through
+``ftc.matmul(x, w, site="attn.qkv")`` (or ``ftc.einsum`` for batched expert
+matmuls).  ``ftc=None`` is the production fast path: plain matmuls, no fault
+machinery anywhere in the lowered HLO.
+
+Bit-exactness invariant (property-tested across all ten registry configs):
+with ``mode="protected"`` and #faults ≤ DPPU capacity, every dispatch mode
+produces outputs bit-exact with ``mode="off"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    FaultState,
+    HyCAConfig,
+    _pe_grids,
+    hyca_matmul,
+    repaired_grid,
+    validate_fault_state,
+)
+
+# Protection sites — the call-site vocabulary of the model stack.  A site
+# names a *class* of weight matmuls, not a tensor: the policy decides per
+# site, the layer fraction decides per main-stack layer.
+SITES = (
+    "attn.qkv",   # Q/K/V (and MLA LoRA down/up) projections
+    "attn.out",   # attention output projection
+    "ffn",        # dense FFN up/gate/down (incl. MoE shared experts, RWKV channel mix)
+    "moe.router", # MoE router logits
+    "moe.expert", # batched per-expert matmuls
+    "ssm.in",     # SSM/RWKV input-side projections (in_proj, r/k/v/g, decay LoRA)
+    "ssm.out",    # SSM/RWKV output projections
+    "head",       # LM head (dense logits + chunked-loss head)
+    "mm.proj",    # multimodal projector
+)
+
+DISPATCHES = ("plain", "twopass", "fused")
+FUSED_BACKENDS = ("pallas", "interpret", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectPolicy:
+    """Static per-site / per-layer protection policy.
+
+    ``sites``: which call sites run on the protected array (``None`` = all of
+    :data:`SITES`).  ``layer_fraction``: leading fraction of each main-stack
+    layer scan that runs protected; the remaining layers are lowered with
+    plain matmuls (zero fault-machinery overhead, not a traced select).
+    """
+
+    sites: frozenset[str] | None = None
+    layer_fraction: float = 1.0
+
+    def __post_init__(self):
+        if self.sites is not None:
+            unknown = set(self.sites) - set(SITES)
+            if unknown:
+                raise ValueError(f"unknown protection sites {sorted(unknown)}; known: {SITES}")
+        if not 0.0 <= self.layer_fraction <= 1.0:
+            raise ValueError(f"layer_fraction must be in [0, 1], got {self.layer_fraction}")
+
+    def covers(self, site: str) -> bool:
+        if site not in SITES:
+            raise ValueError(f"unknown site {site!r}; known: {SITES}")
+        return self.sites is None or site in self.sites
+
+    def n_protected_layers(self, n_layers: int) -> int:
+        return min(n_layers, int(math.ceil(self.layer_fraction * n_layers)))
+
+
+def _as_2d(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FTContext:
+    """Fault-aware execution context.  A pytree: ``state`` is the (traced)
+    leaf, everything else is static aux data — jit a function over an
+    ``FTContext`` argument and only fault-table *values* change per call.
+
+    Build with :func:`build_ftcontext` (which picks the fused backend for the
+    current JAX backend and validates the fault table against the array
+    geometry) rather than direct construction.
+    """
+
+    state: FaultState | None
+    hyca: HyCAConfig
+    policy: ProtectPolicy = dataclasses.field(default_factory=ProtectPolicy)
+    dispatch: str = "twopass"
+    fused_backend: str = "ref"
+    fused_block: tuple[int, int, int] = (128, 128, 128)
+
+    # ------------------------------------------------------------------ #
+    # pytree protocol
+    # ------------------------------------------------------------------ #
+    def tree_flatten(self):
+        aux = (self.hyca, self.policy, self.dispatch, self.fused_backend, self.fused_block)
+        return (self.state,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], *aux)
+
+    # ------------------------------------------------------------------ #
+    # static predicates
+    # ------------------------------------------------------------------ #
+    @property
+    def mode(self) -> str:
+        return self.hyca.mode
+
+    @property
+    def active(self) -> bool:
+        """Does any matmul route through the fault-aware path at all?"""
+        return self.state is not None and self.hyca.mode != "off"
+
+    def protects(self, site: str) -> bool:
+        return self.active and self.policy.covers(site)
+
+    def n_protected_layers(self, n_layers: int) -> int:
+        if not self.active:
+            return 0
+        return self.policy.n_protected_layers(n_layers)
+
+    def with_state(self, state: FaultState | None) -> "FTContext":
+        """Same static context, new fault table (per-step serving update)."""
+        return dataclasses.replace(self, state=state)
+
+    # ------------------------------------------------------------------ #
+    # op dispatch
+    # ------------------------------------------------------------------ #
+    def matmul(self, x: jax.Array, w: jax.Array, *, site: str) -> jax.Array:
+        """``x @ w`` with ``x: (..., K)`` and ``w: (K, N)``; routed through
+        the protected virtual array when the policy covers ``site``.
+
+        The clean accumulate stays in the caller's layout (no pre-reshape),
+        so it lowers to the identical XLA dot as the unprotected path —
+        required for the bit-exact protected==off invariant.
+        """
+        if not self.protects(site):
+            return jnp.matmul(x, w)
+        if self.dispatch == "plain":
+            out = jnp.matmul(x, w)
+        elif self.dispatch == "twopass":
+            out = hyca_matmul(x, w, self.state, cfg=self.hyca)
+        elif self.dispatch == "fused":
+            out = self._fused(x, w)
+        else:
+            raise ValueError(f"unknown dispatch {self.dispatch!r}; known: {DISPATCHES}")
+        return out.astype(x.dtype)
+
+    def einsum(self, spec: str, x: jax.Array, w: jax.Array, *, site: str) -> jax.Array:
+        """Batched-weight einsum through the protected array.
+
+        Supports the MoE expert-matmul patterns (``becd,edf->becf`` and
+        ``becf,efd->becd``): each expert's matmul is one virtual-array
+        execution, vmapped over the expert axis via the two-pass engine path
+        (the fused kernel covers plain 2-D projections; batched expert
+        matmuls always use the engine until a batched kernel lands).
+        """
+        if not self.protects(site) or self.dispatch == "plain":
+            return jnp.einsum(spec, x, w)
+        if spec not in ("becd,edf->becf", "becf,efd->becd"):
+            raise ValueError(
+                f"FTContext.einsum supports the expert-matmul patterns only, got {spec!r}"
+            )
+        b, e, c, d = x.shape
+        xe = x.transpose(1, 0, 2, 3).reshape(e, b * c, d)
+        state, cfg = self.state, self.hyca
+        out = jax.vmap(lambda xi, wi: hyca_matmul(xi, wi, state, cfg=cfg))(xe, w)
+        n = w.shape[-1]
+        return out.reshape(e, b, c, n).transpose(1, 0, 2, 3).astype(x.dtype)
+
+    # ------------------------------------------------------------------ #
+    # fused dispatch
+    # ------------------------------------------------------------------ #
+    def _fused(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        cfg = self.hyca
+        capacity = cfg.capacity if cfg.mode == "protected" else 0
+        if self.fused_backend == "ref":
+            # Non-TPU fallback: the engine's two-pass formula IS the fused
+            # kernel's element-granular semantics (corrupt-all + repaired
+            # overwrite ≡ corrupt where faulty & ~repaired), so delegating
+            # makes fused-vs-twopass bitwise identical by construction —
+            # not merely up to cross-program matmul rounding.
+            return hyca_matmul(x, w, self.state, cfg=cfg)
+        # Pallas kernel (compiled on TPU, interpret elsewhere): single fused
+        # pass — repaired tiles skip the fault mux at drain, so the DPPU
+        # recompute costs zero extra HBM traffic.  Tile→PE mapping is at
+        # (bm, bn) tile granularity; inputs are zero-padded to block
+        # multiples and the result sliced back.
+        from repro.kernels.ft_matmul import ft_matmul  # deferred: pallas import
+
+        bm, bn, bk = self.fused_block
+        x2, lead = _as_2d(x)
+        m, k = x2.shape
+        n = w.shape[-1]
+        mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+        xp = jnp.pad(x2.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+        wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+        bit, val, faulty = _pe_grids(self.state, cfg.rows, cfg.cols)
+        repaired = repaired_grid(self.state, cfg.rows, cfg.cols, capacity)
+        out = ft_matmul(
+            xp, wp, bit, val, faulty, repaired,
+            bm=bm, bn=bn, bk=bk, rows=cfg.rows, cols=cfg.cols,
+            interpret=self.fused_backend == "interpret",
+        )
+        return out[:m, :n].reshape(*lead, n)
+
+
+def build_ftcontext(
+    state: FaultState | None,
+    hyca: HyCAConfig,
+    *,
+    policy: ProtectPolicy | None = None,
+    dispatch: str = "twopass",
+    fused_block: tuple[int, int, int] = (128, 128, 128),
+) -> FTContext:
+    """Build an :class:`FTContext`, choosing the fused backend **once**.
+
+    On a TPU backend the fused dispatch lowers the compiled Pallas kernel;
+    everywhere else it falls back to the pure-jnp oracle (element-granular,
+    bit-identical to the two-pass engine semantics).  Pass
+    ``dispatch="fused"`` + a non-TPU backend and you still get full fault
+    semantics — just without the single-pass HBM win the kernel buys on TPU.
+
+    Host-side :func:`~repro.core.engine.validate_fault_state` runs here: FPT
+    entries outside the (rows, cols) array geometry raise immediately instead
+    of silently wrapping around at matmul time.
+    """
+    if dispatch not in DISPATCHES:
+        raise ValueError(f"unknown dispatch {dispatch!r}; known: {DISPATCHES}")
+    if state is not None:
+        validate_fault_state(state, hyca.rows, hyca.cols)
+    backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return FTContext(
+        state=state,
+        hyca=hyca,
+        policy=policy or ProtectPolicy(),
+        dispatch=dispatch,
+        fused_backend=backend,
+        fused_block=fused_block,
+    )
+
+
+def site_matmul(ftc: FTContext | None, site: str) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """The model-side helper: a plain ``jnp.matmul`` when no context is
+    threaded (production fast path), else the context's dispatcher bound to
+    one call site."""
+    if ftc is None:
+        return jnp.matmul
+    return lambda x, w: ftc.matmul(x, w, site=site)

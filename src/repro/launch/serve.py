@@ -15,11 +15,13 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core.ftcontext import FTContext
 from repro.dist.sharding import cache_specs, named, param_specs, resolve_spec
 from repro.models.lm import LMConfig, decode_step, forward
 
 
-def make_prefill(cfg: LMConfig, mesh: Mesh, params_shapes: Any, batch_shapes: Any):
+def make_prefill(cfg: LMConfig, mesh: Mesh, params_shapes: Any, batch_shapes: Any,
+                 *, ftc: FTContext | None = None):
     pspec = param_specs(params_shapes, mesh)
     bspec = jax.tree.map(
         lambda v: resolve_spec(["batch"] + [None] * (len(v.shape) - 1), v.shape, mesh),
@@ -27,7 +29,7 @@ def make_prefill(cfg: LMConfig, mesh: Mesh, params_shapes: Any, batch_shapes: An
     )
 
     def prefill(params, batch):
-        logits, _ = forward(params, cfg, batch, last_only=True)
+        logits, _ = forward(params, cfg, batch, last_only=True, ftc=ftc)
         return logits
 
     fn = jax.jit(
@@ -38,7 +40,8 @@ def make_prefill(cfg: LMConfig, mesh: Mesh, params_shapes: Any, batch_shapes: An
     return fn, (pspec, bspec)
 
 
-def make_decode(cfg: LMConfig, mesh: Mesh, params_shapes: Any, cache_shapes: Any, *, batch: int | None = None):
+def make_decode(cfg: LMConfig, mesh: Mesh, params_shapes: Any, cache_shapes: Any, *,
+                batch: int | None = None, ftc: FTContext | None = None):
     pspec = param_specs(params_shapes, mesh)
     cspec = cache_specs(cache_shapes, mesh)
     if batch is None:  # infer the request batch from any batch-major cache leaf
@@ -47,7 +50,7 @@ def make_decode(cfg: LMConfig, mesh: Mesh, params_shapes: Any, cache_shapes: Any
     tok_spec = resolve_spec(["batch", None], (batch, 1), mesh)
 
     def step(params, cache, batch):
-        return decode_step(params, cfg, cache, batch)
+        return decode_step(params, cfg, cache, batch, ftc=ftc)
 
     fn = jax.jit(
         step,
@@ -80,6 +83,8 @@ def main(argv=None):
     ap.add_argument("--cols", type=int, default=8)
     ap.add_argument("--dppu", type=int, default=4)
     ap.add_argument("--protect-fraction", type=float, default=1.0)
+    ap.add_argument("--dispatch", default="twopass", choices=["twopass", "fused"],
+                    help="FTContext kernel dispatch for protected matmuls")
     ap.add_argument("--sla", type=int, default=0, help="deadline in steps (0 = none)")
     ap.add_argument("--max-steps", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
@@ -88,8 +93,8 @@ def main(argv=None):
     cfg = ServerConfig(
         arch=args.arch, n_slots=args.slots, smax=args.prompt_len + args.gen + 2,
         mode=args.mode, rows=args.rows, cols=args.cols, dppu_size=args.dppu,
-        protect_fraction=args.protect_fraction, fault_rate=args.fault_rate,
-        seed=args.seed,
+        protect_fraction=args.protect_fraction, dispatch=args.dispatch,
+        fault_rate=args.fault_rate, seed=args.seed,
     )
     server = FaultTolerantServer(cfg)
     if args.faults:

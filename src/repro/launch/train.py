@@ -9,9 +9,10 @@
     batch over ("pod","data");
   * ZeRO-1 optimizer-moment sharding over the data axes;
   * optional top-k gradient compression with error feedback;
-  * optional HyCA protection: FFN matmuls route through the paper's
-    fault-tolerant engine (core.engine.hyca_matmul) with the FaultState a
-    traced input — fault tables update without recompiles.
+  * optional HyCA protection: a core.ftcontext.FTContext routes every weight
+    matmul (attention/FFN/expert/SSM projections + LM head) through the
+    paper's fault-tolerant engine with the FaultState a traced input — fault
+    tables update without recompiles.
 
 Run ``PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b
 --smoke`` for a CPU-scale training run with checkpoint/restart.
@@ -29,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.engine import FaultState, HyCAConfig, hyca_matmul
+from repro.core.engine import FaultState, HyCAConfig
+from repro.core.ftcontext import FTContext, ProtectPolicy, build_ftcontext
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.dist.sharding import (DEFAULT_RULES, DP_RULES, EP_RULES, named,
     param_specs, resolve_spec, use_mesh, use_rules, zero1_specs)
@@ -47,6 +49,8 @@ class TrainConfig:
     total_steps: int = 1000
     grad_compress_ratio: float = 0.0   # 0 = off
     hyca_mode: str = "off"             # off | protected | unprotected
+    hyca_dispatch: str = "twopass"     # plain | twopass | fused (FTContext)
+    protect_fraction: float = 1.0      # fraction of main-stack layers protected
     aux_weight: float = 0.01
     # §Perf optimization: cast fp32 master params to bf16 ONCE per step
     # instead of inside every microbatch (the baseline re-reads + re-casts the
@@ -57,11 +61,16 @@ class TrainConfig:
     unroll_micro: bool = False
 
 
-def hyca_dot(x: jax.Array, w: jax.Array, state: FaultState, cfg: HyCAConfig):
-    """N-D wrapper over the 2-D protected matmul (engine.py)."""
-    lead = x.shape[:-1]
-    out = hyca_matmul(x.reshape(-1, x.shape[-1]), w, state, cfg=cfg)
-    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+def make_ftc(tc: TrainConfig, hyca: HyCAConfig | None, state: FaultState | None) -> FTContext | None:
+    """Build the training FTContext from config (None = protection off)."""
+    if hyca is None or tc.hyca_mode == "off" or state is None:
+        return None
+    hcfg = dataclasses.replace(hyca, mode=tc.hyca_mode)
+    return build_ftcontext(
+        state, hcfg,
+        policy=ProtectPolicy(layer_fraction=tc.protect_fraction),
+        dispatch=tc.hyca_dispatch,
+    )
 
 
 def init_state(key, cfg: LMConfig, tc: TrainConfig) -> dict:
@@ -127,12 +136,6 @@ def make_train_step(
     sspec = state_specs(state_shapes, mesh, profile)
     bspec = batch_specs(batch_shapes, mesh, profile)
 
-    def dot_for(fstate):
-        if hyca is None or tc.hyca_mode == "off" or fstate is None:
-            return None
-        hcfg = dataclasses.replace(hyca, mode=tc.hyca_mode)
-        return lambda x, w: hyca_dot(x, w, fstate, hcfg)
-
     def _train_step(state, batch, fault_state=None):
         params = state["params"]
         if tc.cast_once:
@@ -146,12 +149,12 @@ def make_train_step(
         else:
             fwd_params = params
         micro = _split_micro(batch, tc.n_micro)
-        dot = dot_for(fault_state)
+        ftc = make_ftc(tc, hyca, fault_state)
 
         def micro_step(carry, mb):
             gacc, lacc, aacc = carry
             (loss, metrics), grads = jax.value_and_grad(
-                lambda p: loss_fn(p, cfg, mb, aux_weight=tc.aux_weight, dot=dot),
+                lambda p: loss_fn(p, cfg, mb, aux_weight=tc.aux_weight, ftc=ftc),
                 has_aux=True,
             )(fwd_params)
             gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gacc, grads)
@@ -222,6 +225,8 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--compress", type=float, default=0.0)
     ap.add_argument("--hyca-mode", default="off", choices=["off", "protected", "unprotected"])
+    ap.add_argument("--hyca-dispatch", default="twopass", choices=["plain", "twopass", "fused"])
+    ap.add_argument("--protect-fraction", type=float, default=1.0)
     ap.add_argument("--hyca-faults", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -234,6 +239,8 @@ def main(argv=None):
         warmup=max(1, args.steps // 10),
         grad_compress_ratio=args.compress,
         hyca_mode=args.hyca_mode,
+        hyca_dispatch=args.hyca_dispatch,
+        protect_fraction=args.protect_fraction,
     )
     mesh = make_host_mesh()
     key = jax.random.key(args.seed)

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import site_matmul
 from repro.dist.sharding import shard as _shard
 from repro.models.layers import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init, scan_or_unroll
 
@@ -50,12 +51,13 @@ def gqa_init(key, cfg: AttnConfig) -> Params:
     return p
 
 
-def _qkv(x, p, cfg: AttnConfig, positions):
+def _qkv(x, p, cfg: AttnConfig, positions, ftc=None):
     b, s, _ = x.shape
     hd = cfg.hd
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    mm = site_matmul(ftc, "attn.qkv")
+    q = mm(x, p["wq"])
+    k = mm(x, p["wk"])
+    v = mm(x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, s, cfg.n_heads, hd)
@@ -102,21 +104,21 @@ def blockwise_causal_attention(q, k, v, n_kv: int, q_block: int, unroll: bool = 
     return outs.swapaxes(0, 1).reshape(b, s, hq, d)
 
 
-def gqa_forward(x, p, cfg: AttnConfig, positions=None, unroll: bool = False) -> jax.Array:
+def gqa_forward(x, p, cfg: AttnConfig, positions=None, unroll: bool = False, ftc=None) -> jax.Array:
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    q, k, v = _qkv(x, p, cfg, positions)
+    q, k, v = _qkv(x, p, cfg, positions, ftc)
     out = blockwise_causal_attention(q, k, v, cfg.n_kv, cfg.q_block, unroll)
-    out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+    out = site_matmul(ftc, "attn.out")(out.reshape(b, s, cfg.n_heads * cfg.hd), p["wo"])
     return _shard(out, "batch", "seq", "embed")  # bf16 reshard point (§Perf)
 
 
-def gqa_decode(x, p, cfg: AttnConfig, cache: Params) -> tuple[jax.Array, Params]:
+def gqa_decode(x, p, cfg: AttnConfig, cache: Params, ftc=None) -> tuple[jax.Array, Params]:
     """One-token decode. x: (B,1,d); cache: {k,v: (B,Smax,Hk,D), idx: (B,)}."""
     b = x.shape[0]
     idx = cache["idx"]  # (B,) current length
-    q, k_new, v_new = _qkv(x, p, cfg, idx[:, None])
+    q, k_new, v_new = _qkv(x, p, cfg, idx[:, None], ftc)
     bidx = jnp.arange(b)
     k_cache = cache["k"].at[bidx, idx].set(k_new[:, 0].astype(cache["k"].dtype))
     v_cache = cache["v"].at[bidx, idx].set(v_new[:, 0].astype(cache["v"].dtype))
@@ -131,7 +133,7 @@ def gqa_decode(x, p, cfg: AttnConfig, cache: Params) -> tuple[jax.Array, Params]
     out = jnp.einsum("bhgs,bshd->bhgd", wts, v_cache.astype(jnp.float32))
     out = out.reshape(b, 1, cfg.n_heads * cfg.hd).astype(x.dtype)
     new_cache = {"k": k_cache, "v": v_cache, "idx": idx + 1}
-    return out @ p["wo"], new_cache
+    return site_matmul(ftc, "attn.out")(out, p["wo"]), new_cache
 
 
 def gqa_cache_init(cfg: AttnConfig, batch: int, smax: int, dtype=jnp.bfloat16) -> Params:
@@ -172,14 +174,15 @@ def mla_init(key, cfg: MLAConfig) -> Params:
     }
 
 
-def _mla_qkr(x, p, cfg: MLAConfig, positions):
+def _mla_qkr(x, p, cfg: MLAConfig, positions, ftc=None):
     b, s, _ = x.shape
     h, dn, dr = cfg.n_heads, cfg.d_nope, cfg.d_rope
-    q = rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    mm = site_matmul(ftc, "attn.qkv")
+    q = mm(rmsnorm(mm(x, p["wq_a"]), p["q_norm"]), p["wq_b"])
     q = q.reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
-    kv_a = x @ p["wkv_a"]
+    kv_a = mm(x, p["wkv_a"])
     c_kv = rmsnorm(kv_a[..., : cfg.kv_lora], p["kv_norm"])  # (B,S,kv_lora)
     k_rope = apply_rope(kv_a[..., cfg.kv_lora :][:, :, None, :], positions, cfg.rope_theta)[
         :, :, 0
@@ -187,13 +190,13 @@ def _mla_qkr(x, p, cfg: MLAConfig, positions):
     return q_nope, q_rope, c_kv, k_rope
 
 
-def mla_forward(x, p, cfg: MLAConfig, positions=None, unroll: bool = False) -> jax.Array:
+def mla_forward(x, p, cfg: MLAConfig, positions=None, unroll: bool = False, ftc=None) -> jax.Array:
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     h, dn, dr, dv = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v
-    q_nope, q_rope, c_kv, k_rope = _mla_qkr(x, p, cfg, positions)
-    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(x, p, cfg, positions, ftc)
+    kv = site_matmul(ftc, "attn.qkv")(c_kv, p["wkv_b"]).reshape(b, s, h, dn + dv)
     k_nope, v = kv[..., :dn], kv[..., dn:]
     scale = 1.0 / ((dn + dr) ** 0.5)
     qb = min(cfg.q_block, s)
@@ -225,7 +228,7 @@ def mla_forward(x, p, cfg: MLAConfig, positions=None, unroll: bool = False) -> j
         unroll,
     )
     out = outs.swapaxes(0, 1).reshape(b, s, h * dv)
-    return out @ p["wo"]
+    return site_matmul(ftc, "attn.out")(out, p["wo"])
 
 
 def mla_cache_init(cfg: MLAConfig, batch: int, smax: int, dtype=jnp.bfloat16) -> Params:
@@ -236,13 +239,19 @@ def mla_cache_init(cfg: MLAConfig, batch: int, smax: int, dtype=jnp.bfloat16) ->
     }
 
 
-def mla_decode(x, p, cfg: MLAConfig, cache: Params) -> tuple[jax.Array, Params]:
+def mla_decode(x, p, cfg: MLAConfig, cache: Params, ftc=None) -> tuple[jax.Array, Params]:
     """Absorbed-matmul decode: attention runs in the compressed latent space so
-    the cache stays (kv_lora + d_rope) per token — MLA's whole point."""
+    the cache stays (kv_lora + d_rope) per token — MLA's whole point.
+
+    The absorbed latent einsums (w_uk / w_uv contractions) run off the
+    protected array: they are reshaped views of ``wkv_b``, which *is*
+    protected on the prefill path; coverage here is the q-side projections
+    plus the output projection (see docs/ftcontext.md).
+    """
     b = x.shape[0]
     idx = cache["idx"]
     h, dn, dr, dv = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v
-    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(x, p, cfg, idx[:, None])
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(x, p, cfg, idx[:, None], ftc)
     bidx = jnp.arange(b)
     c_cache = cache["c_kv"].at[bidx, idx].set(c_kv_new[:, 0].astype(cache["c_kv"].dtype))
     r_cache = cache["k_rope"].at[bidx, idx].set(k_rope_new[:, 0].astype(cache["k_rope"].dtype))
@@ -260,4 +269,5 @@ def mla_decode(x, p, cfg: MLAConfig, cache: Params) -> tuple[jax.Array, Params]:
     wts = jax.nn.softmax(sc, axis=-1)
     ctx = jnp.einsum("bhs,bsl->bhl", wts, c_cache.astype(jnp.float32))
     out = jnp.einsum("bhl,lhd->bhd", ctx, w_uv).reshape(b, 1, h * dv).astype(x.dtype)
-    return out @ p["wo"], {"c_kv": c_cache, "k_rope": r_cache, "idx": idx + 1}
+    out = site_matmul(ftc, "attn.out")(out, p["wo"])
+    return out, {"c_kv": c_cache, "k_rope": r_cache, "idx": idx + 1}

@@ -13,6 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import site_matmul
 from repro.models.attention import AttnConfig, gqa_cache_init, gqa_decode, gqa_init
 from repro.models.layers import (
     Params,
@@ -47,31 +48,33 @@ def cross_attn_init(key, cfg: CrossAttnConfig) -> Params:
     }
 
 
-def cross_attn(x: jax.Array, enc: jax.Array, p: Params, cfg: CrossAttnConfig) -> jax.Array:
+def cross_attn(x: jax.Array, enc: jax.Array, p: Params, cfg: CrossAttnConfig, ftc=None) -> jax.Array:
     """x: (B, S, d) queries; enc: (B, T, d) encoder keys/values (no mask)."""
     b, s, d = x.shape
     t = enc.shape[1]
     h, hd = cfg.n_heads, cfg.hd
-    q = (x @ p["wq"]).reshape(b, s, h, hd)
-    k = (enc @ p["wk"]).reshape(b, t, h, hd)
-    v = (enc @ p["wv"]).reshape(b, t, h, hd)
+    mm = site_matmul(ftc, "attn.qkv")
+    q = mm(x, p["wq"]).reshape(b, s, h, hd)
+    k = mm(enc, p["wk"]).reshape(b, t, h, hd)
+    v = mm(enc, p["wv"]).reshape(b, t, h, hd)
     sc = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
     wts = jax.nn.softmax(sc / (hd**0.5), axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", wts, v.astype(jnp.float32)).astype(x.dtype)
-    return out.reshape(b, s, d) @ p["wo"]
+    return site_matmul(ftc, "attn.out")(out.reshape(b, s, d), p["wo"])
 
 
-def _self_attn_bidir(x: jax.Array, p: Params, cfg: AttnConfig) -> jax.Array:
+def _self_attn_bidir(x: jax.Array, p: Params, cfg: AttnConfig, ftc=None) -> jax.Array:
     """Full bidirectional MHA (encoder); no RoPE (whisper uses absolute pos)."""
     b, s, _ = x.shape
     h, hd = cfg.n_heads, cfg.hd
-    q = (x @ p["wq"]).reshape(b, s, h, hd)
-    k = (x @ p["wk"]).reshape(b, s, h, hd)
-    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    mm = site_matmul(ftc, "attn.qkv")
+    q = mm(x, p["wq"]).reshape(b, s, h, hd)
+    k = mm(x, p["wk"]).reshape(b, s, h, hd)
+    v = mm(x, p["wv"]).reshape(b, s, h, hd)
     sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
     wts = jax.nn.softmax(sc / (hd**0.5), axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", wts, v.astype(jnp.float32)).astype(x.dtype)
-    return out.reshape(b, s, h * hd) @ p["wo"]
+    return site_matmul(ftc, "attn.out")(out.reshape(b, s, h * hd), p["wo"])
 
 
 # --------------------------------------------------------------------------- #
@@ -97,14 +100,14 @@ def encoder_init(key, n_layers: int, d: int, n_heads: int, d_ff: int) -> Params:
     }
 
 
-def encoder_forward(frames: jax.Array, p: Params, d: int, n_heads: int, unroll: bool = False) -> jax.Array:
+def encoder_forward(frames: jax.Array, p: Params, d: int, n_heads: int, unroll: bool = False, ftc=None) -> jax.Array:
     """frames: (B, T, d) precomputed mel-frame embeddings (frontend stub)."""
     acfg = AttnConfig(d, n_heads, n_heads)
     x = frames + sinusoidal_positions(frames.shape[1], d)[None].astype(frames.dtype)
 
     def block(x, lp):
-        x = x + _self_attn_bidir(layernorm(x, lp["ln1"]), lp["attn"], acfg)
-        x = x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu)
+        x = x + _self_attn_bidir(layernorm(x, lp["ln1"]), lp["attn"], acfg, ftc)
+        x = x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu, ftc=ftc)
         return x, None
 
     from repro.models.layers import scan_or_unroll

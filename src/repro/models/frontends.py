@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import site_matmul
 from repro.models.layers import Params, dense_init, sinusoidal_positions
 
 
@@ -35,10 +36,11 @@ def mm_projector_init(key, d_vision: int, d_model: int) -> Params:
     }
 
 
-def mm_project(patches: jax.Array, p: Params) -> jax.Array:
+def mm_project(patches: jax.Array, p: Params, ftc=None) -> jax.Array:
     """patches: (B, N_patch, d_vision) -> (B, N_patch, d_model)."""
-    h = jax.nn.gelu(patches @ p["fc1"].astype(patches.dtype) + p["b1"].astype(patches.dtype))
-    return h @ p["fc2"].astype(patches.dtype) + p["b2"].astype(patches.dtype)
+    mm = site_matmul(ftc, "mm.proj")
+    h = jax.nn.gelu(mm(patches, p["fc1"].astype(patches.dtype)) + p["b1"].astype(patches.dtype))
+    return mm(h, p["fc2"].astype(patches.dtype)) + p["b2"].astype(patches.dtype)
 
 
 def splice_patches(tok_emb: jax.Array, patch_emb: jax.Array) -> jax.Array:

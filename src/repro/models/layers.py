@@ -13,6 +13,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import site_matmul
 from repro.dist.sharding import shard as _shard
 
 Params = dict
@@ -112,16 +113,18 @@ def ffn_init(key, d: int, d_ff: int, gated: bool = True) -> Params:
 
 
 def ffn(
-    x: jax.Array, p: Params, act: Callable = jax.nn.silu, dot: Callable = jnp.matmul
+    x: jax.Array, p: Params, act: Callable = jax.nn.silu, ftc=None, site: str = "ffn"
 ) -> jax.Array:
-    """``dot`` is injectable so the HyCA-protected matmul (core.engine) can be
-    threaded through the FFN path — the framework's fault-tolerance hook."""
-    h = dot(x, p["up"])
+    """``ftc`` (core.ftcontext.FTContext) routes the up/gate/down matmuls
+    through the HyCA-protected virtual array — the framework's
+    fault-tolerance hook.  ``ftc=None`` lowers plain matmuls."""
+    mm = site_matmul(ftc, site)
+    h = mm(x, p["up"])
     if "gate" in p:
-        h = act(dot(x, p["gate"])) * h
+        h = act(mm(x, p["gate"])) * h
     else:
         h = act(h)
-    out = dot(h, p["down"])
+    out = mm(h, p["down"])
     if out.ndim == 3:
         # pin the row-parallel reshard HERE, on the bf16 dot output, before
         # any f32 consumer can pull the convert above the all-reduce (§Perf)
@@ -149,7 +152,7 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
 
 def streamed_cross_entropy(
     x: jax.Array, table: jax.Array, labels: jax.Array, n_chunks: int, true_vocab: int,
-    unroll: bool = False,
+    unroll: bool = False, ftc=None,
 ) -> jax.Array:
     """NLL of ``x @ table.T`` computed in vocab chunks — the (B, S, V) logit
     tensor is never materialised (§Perf: the dense loss head costs ~10 layers
@@ -163,29 +166,48 @@ def streamed_cross_entropy(
     assert v % n_chunks == 0, (v, n_chunks)
     tc = v // n_chunks
     xf = x.reshape(b * s, d)
-    # label logit via row gather (tiny): (N, d) . (N, d) -> (N,)
     lab = jnp.maximum(labels.reshape(-1), 0)
-    ll = jnp.sum(xf * table[lab].astype(x.dtype), axis=-1).astype(jnp.float32)
+    head_mm = site_matmul(ftc, "head")
+    # With a fault-aware context the label logit must come from the SAME
+    # (possibly corrupted) chunk logits as the normalizer — a separate clean
+    # gather would mix a faulty logsumexp with a fault-free numerator and
+    # misreport the fault's impact on the loss.  The plain path keeps the
+    # cheap row-gather.
+    fault_path = ftc is not None and ftc.protects("head")
+    if not fault_path:
+        # label logit via row gather (tiny): (N, d) . (N, d) -> (N,)
+        ll = jnp.sum(xf * table[lab].astype(x.dtype), axis=-1).astype(jnp.float32)
 
     def chunk(carry, ci):
-        m, acc = carry  # running max / sum-exp (N,)
+        m, acc, llc = carry  # running max / sum-exp / label logit (N,)
         rows = jax.lax.dynamic_slice(table, (ci * tc, 0), (tc, d)).astype(x.dtype)
-        lg = (xf @ rows.T).astype(jnp.float32)  # (N, tc)
+        lg = head_mm(xf, rows.T).astype(jnp.float32)  # (N, tc)
         pad = ci * tc + jnp.arange(tc) >= true_vocab
         lg = jnp.where(pad, -1e30, lg)
         m2 = jnp.maximum(m, lg.max(-1))
         acc = acc * jnp.exp(m - m2) + jnp.exp(lg - m2[:, None]).sum(-1)
-        return (m2, acc), None
+        if fault_path:  # pick the label's logit out of this chunk's panel
+            inchunk = (lab >= ci * tc) & (lab < (ci + 1) * tc)
+            col = jnp.clip(lab - ci * tc, 0, tc - 1)
+            got = jnp.take_along_axis(lg, col[:, None], axis=1)[:, 0]
+            llc = jnp.where(inchunk, got, llc)
+        return (m2, acc, llc), None
 
-    init = (jnp.full((b * s,), -1e30, jnp.float32), jnp.zeros((b * s,), jnp.float32))
+    init = (
+        jnp.full((b * s,), -1e30, jnp.float32),
+        jnp.zeros((b * s,), jnp.float32),
+        jnp.zeros((b * s,), jnp.float32),
+    )
     f = jax.checkpoint(chunk)
     if unroll:  # roofline probes: count every chunk
         carry = init
         for ci in range(n_chunks):
             carry, _ = f(carry, jnp.asarray(ci))
-        m, acc = carry
+        m, acc, llf = carry
     else:
-        (m, acc), _ = jax.lax.scan(f, init, jnp.arange(n_chunks))
+        (m, acc, llf), _ = jax.lax.scan(f, init, jnp.arange(n_chunks))
+    if fault_path:
+        ll = llf
     lse = m + jnp.log(acc)
     mask = (labels.reshape(-1) >= 0).astype(jnp.float32)
     return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1.0)

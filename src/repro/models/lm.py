@@ -12,19 +12,23 @@ Design rules:
       forward(params, cfg, batch)            -> logits           (train/prefill)
       init_cache(cfg, batch, smax)           -> cache pytree     (serve)
       decode_step(params, cfg, cache, batch) -> (logits, cache)  (serve)
-  * optional ``dot`` injection threads the HyCA-protected matmul
-    (core.engine.hyca_matmul) through the FFN path — the paper's technique as
-    a first-class framework feature (see launch/train.py --hyca-mode).
+  * an optional :class:`~repro.core.ftcontext.FTContext` threads the
+    HyCA-protected matmul through **every** weight matmul — attention
+    projections, FFNs, MoE routers + experts, SSM/RWKV projections, the
+    multimodal projector, and the LM head — with per-site policy and a
+    static protected-layer prefix (unprotected layers lower plain matmuls,
+    zero fault-machinery overhead).  See docs/ftcontext.md.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import FTContext, site_matmul
 from repro.dist.sharding import shard
 from repro.models import encdec as ed
 from repro.models.attention import (
@@ -235,26 +239,28 @@ def init_params(key, cfg: LMConfig) -> Params:
 # --------------------------------------------------------------------------- #
 # forward (train / prefill)
 # --------------------------------------------------------------------------- #
-def _attn_fwd(x, p, cfg: LMConfig, positions):
+def _attn_fwd(x, p, cfg: LMConfig, positions, ftc: FTContext | None = None):
     if cfg.attn_kind == "mla":
-        return mla_forward(x, p, cfg.mla, positions, unroll=cfg.unroll)
-    return gqa_forward(x, p, cfg.attn_cfg, positions, unroll=cfg.unroll)
+        return mla_forward(x, p, cfg.mla, positions, unroll=cfg.unroll, ftc=ftc)
+    return gqa_forward(x, p, cfg.attn_cfg, positions, unroll=cfg.unroll, ftc=ftc)
 
 
-def _embed(params, cfg: LMConfig, batch) -> jax.Array:
+def _embed(params, cfg: LMConfig, batch, ftc: FTContext | None = None) -> jax.Array:
     tokens = batch["tokens"]
     emb = params["embed"].astype(cfg.dtype)
     x = emb[tokens]
     if cfg.family == "vlm" and "patches" in batch:
-        proj = mm_project(batch["patches"].astype(cfg.dtype), _cast(params["mm_proj"], cfg.dtype))
+        proj = mm_project(
+            batch["patches"].astype(cfg.dtype), _cast(params["mm_proj"], cfg.dtype), ftc
+        )
         x = splice_patches(x, proj)
     return shard(x, "batch", "seq", "embed")
 
 
-def _logits(x, params, cfg: LMConfig):
+def _logits(x, params, cfg: LMConfig, ftc: FTContext | None = None):
     x = _norm(x, params["final_norm"], cfg)
     table = params.get("lm_head", params["embed"]).astype(cfg.dtype)
-    logits = x @ table.T
+    logits = site_matmul(ftc, "head")(x, table.T)
     if cfg.padded_vocab != cfg.vocab:  # mask padded rows out of the softmax
         pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
         logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
@@ -284,78 +290,114 @@ def _scan_blocks(x, blocks, body, cfg: LMConfig, carry_aux=False):
     return out
 
 
+def _layer_splits(n: int, ftc: FTContext | None) -> list[tuple[int, int, FTContext | None]]:
+    """Static protected-prefix split of an ``n``-layer stack.
+
+    The ProtectPolicy's layer fraction becomes a compile-time split: layers
+    [0, k) scan with the fault-aware context, layers [k, n) scan with plain
+    matmuls.  Unprotected layers therefore pay zero overhead — unlike the old
+    traced ``protect_mask`` gate, which evaluated both the protected and the
+    plain matmul and selected between them.
+    """
+    if ftc is None or not ftc.active or n == 0:
+        return [(0, n, ftc if (ftc is not None and ftc.active) else None)]
+    k = ftc.n_protected_layers(n)
+    if k == 0:
+        return [(0, n, None)]
+    if k >= n:
+        return [(0, n, ftc)]
+    return [(0, k, ftc), (k, n, None)]
+
+
+def _slice_layers(tree, lo: int, hi: int):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
 def forward(
     params: Params,
     cfg: LMConfig,
     batch: dict,
     *,
-    dot: Callable | None = None,
+    ftc: FTContext | None = None,
     last_only: bool = False,
     return_hidden: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (logits, aux_loss).  batch: tokens (B,S) [+ frames / patches].
 
+    ``ftc``: fault-aware execution context; every weight matmul in the
+    protected layer prefix (and the frontends / LM head) routes through it.
     ``last_only``: production prefill — project logits for the final position
     only (the (B,S,V) tensor is never built)."""
-    x = _embed(params, cfg, batch)
+    x = _embed(params, cfg, batch, ftc)
     b, s = batch["tokens"].shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     aux = jnp.zeros((), jnp.float32)
-    d = dot if dot is not None else jnp.matmul
     act = _ACTS[cfg.act]
 
     if cfg.family in ("dense", "vlm"):
-        def body(x, lp):
-            x = x + _attn_fwd(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, positions)
-            return x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, dot=d)
-        x = _scan_blocks(x, params["blocks"], body, cfg)
+        def make_body(fc):
+            def body(x, lp):
+                x = x + _attn_fwd(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, positions, fc)
+                return x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, ftc=fc)
+            return body
+        for lo, hi, fc in _layer_splits(cfg.n_layers, ftc):
+            x = _scan_blocks(x, _slice_layers(params["blocks"], lo, hi), make_body(fc), cfg)
 
     elif cfg.family == "moe":
-        def dense_body(x, lp):
-            x = x + _attn_fwd(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, positions)
-            return x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, dot=d)
-        def moe_body(x, lp):
-            x = x + _attn_fwd(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, positions)
-            y, a = moe_forward(_norm(x, lp["ln2"], cfg), lp["moe"], cfg.moe, unroll=cfg.unroll)
-            return x + y, a
         if cfg.first_k_dense:
+            # the first-k dense blocks sit below the gated main stack and are
+            # always protected when a context is threaded
+            def dense_body(x, lp):
+                x = x + _attn_fwd(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, positions, ftc)
+                return x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, ftc=ftc)
             x = _scan_blocks(x, params["dense_blocks"], dense_body, cfg)
-        blocks = _cast(params["blocks"], cfg.dtype)
-        def f(carry, lp):
-            x, a = carry
-            y, ai = moe_body(x, lp)
-            return (shard(y, "batch", "seq", "embed"), a + ai), None
-        f = _remat(f, cfg)
-        if cfg.unroll:
-            carry = (x, aux)
-            for i in range(jax.tree.leaves(blocks)[0].shape[0]):
-                carry, _ = f(carry, jax.tree.map(lambda a: a[i], blocks))
-            x, aux = carry
-        else:
-            (x, aux), _ = jax.lax.scan(f, (x, aux), blocks)
-        aux = aux / max(cfg.n_layers - cfg.first_k_dense, 1)
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        for lo, hi, fc in _layer_splits(n_moe, ftc):
+            blocks = _cast(_slice_layers(params["blocks"], lo, hi), cfg.dtype)
+            def f(carry, lp, fc=fc):
+                x, a = carry
+                x2 = x + _attn_fwd(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, positions, fc)
+                y, ai = moe_forward(
+                    _norm(x2, lp["ln2"], cfg), lp["moe"], cfg.moe, unroll=cfg.unroll, ftc=fc
+                )
+                return (shard(x2 + y, "batch", "seq", "embed"), a + ai), None
+            f = _remat(f, cfg)
+            if cfg.unroll:
+                carry = (x, aux)
+                for i in range(jax.tree.leaves(blocks)[0].shape[0]):
+                    carry, _ = f(carry, jax.tree.map(lambda a: a[i], blocks))
+                x, aux = carry
+            else:
+                (x, aux), _ = jax.lax.scan(f, (x, aux), blocks)
+        aux = aux / max(n_moe, 1)
 
     elif cfg.family == "ssm":
-        def body(x, lp):
-            return rwkv6_forward(x, lp, cfg.rwkv, unroll=cfg.unroll)
-        x = _scan_blocks(x, params["blocks"], body, cfg)
+        def make_body(fc):
+            def body(x, lp):
+                return rwkv6_forward(x, lp, cfg.rwkv, unroll=cfg.unroll, ftc=fc)
+            return body
+        for lo, hi, fc in _layer_splits(cfg.n_layers, ftc):
+            x = _scan_blocks(x, _slice_layers(params["blocks"], lo, hi), make_body(fc), cfg)
 
     elif cfg.family == "hybrid":
-        x = _hybrid_forward(x, params, cfg, positions, act, d)
+        x = _hybrid_forward(x, params, cfg, positions, act, ftc)
 
     elif cfg.family == "encdec":
         enc = ed.encoder_forward(
             audio_frontend(batch["frames"].astype(cfg.dtype)),
             _cast(params["encoder"], cfg.dtype), cfg.d_model, cfg.n_heads,
-            unroll=cfg.unroll,
+            unroll=cfg.unroll, ftc=ftc,
         )
         enc = shard(enc, "batch", "seq", "embed")
         xcfg = ed.CrossAttnConfig(cfg.d_model, cfg.n_heads)
-        def body(x, lp):
-            x = x + gqa_forward(layernorm(x, lp["ln1"]), lp["attn"], cfg.attn_cfg, positions, unroll=cfg.unroll)
-            x = x + ed.cross_attn(layernorm(x, lp["ln_x"]), enc, lp["xattn"], xcfg)
-            return x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu, dot=d)
-        x = _scan_blocks(x, params["blocks"], body, cfg)
+        def make_body(fc):
+            def body(x, lp):
+                x = x + gqa_forward(layernorm(x, lp["ln1"]), lp["attn"], cfg.attn_cfg, positions, unroll=cfg.unroll, ftc=fc)
+                x = x + ed.cross_attn(layernorm(x, lp["ln_x"]), enc, lp["xattn"], xcfg, fc)
+                return x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu, ftc=fc)
+            return body
+        for lo, hi, fc in _layer_splits(cfg.n_layers, ftc):
+            x = _scan_blocks(x, _slice_layers(params["blocks"], lo, hi), make_body(fc), cfg)
     else:
         raise ValueError(cfg.family)
 
@@ -363,7 +405,7 @@ def forward(
         x = x[:, -1:]
     if return_hidden:
         return _norm(x, params["final_norm"], cfg), aux
-    return _logits(x, params, cfg), aux
+    return _logits(x, params, cfg, ftc), aux
 
 
 def _hybrid_groups(cfg: LMConfig) -> list[tuple[int, int]]:
@@ -377,17 +419,20 @@ def _hybrid_groups(cfg: LMConfig) -> list[tuple[int, int]]:
     return groups
 
 
-def _hybrid_forward(x, params, cfg: LMConfig, positions, act, dot):
+def _hybrid_forward(x, params, cfg: LMConfig, positions, act, ftc: FTContext | None = None):
+    """Hybrid stacks are all-or-nothing: the shared attention block runs after
+    every mamba group, so a layer-fraction split has no clean prefix — the
+    whole stack follows the context (see docs/ftcontext.md)."""
     shared = _cast(params["shared"], cfg.dtype)
 
     def mamba_body(x, lp):
-        return x + mamba2_forward(_norm(x, lp["ln"], cfg), lp["mamba"], cfg.ssm, unroll=cfg.unroll)
+        return x + mamba2_forward(_norm(x, lp["ln"], cfg), lp["mamba"], cfg.ssm, unroll=cfg.unroll, ftc=ftc)
 
     for start, length in _hybrid_groups(cfg):
         blocks = jax.tree.map(lambda a: a[start : start + length], params["blocks"])
         x = _scan_blocks(x, blocks, mamba_body, cfg)
-        x = x + _attn_fwd(_norm(x, shared["ln1"], cfg), shared["attn"], cfg, positions)
-        x = x + ffn(_norm(x, shared["ln2"], cfg), shared["ffn"], act=act, dot=dot)
+        x = x + _attn_fwd(_norm(x, shared["ln1"], cfg), shared["attn"], cfg, positions, ftc)
+        x = x + ffn(_norm(x, shared["ln2"], cfg), shared["ffn"], act=act, ftc=ftc)
         x = shard(x, "batch", "seq", "embed")
     return x
 
@@ -395,15 +440,16 @@ def _hybrid_forward(x, params, cfg: LMConfig, positions, act, dot):
 # --------------------------------------------------------------------------- #
 # loss
 # --------------------------------------------------------------------------- #
-def loss_fn(params, cfg: LMConfig, batch, *, aux_weight: float = 0.01, dot=None):
+def loss_fn(params, cfg: LMConfig, batch, *, aux_weight: float = 0.01, ftc: FTContext | None = None):
     if cfg.loss_chunks:
-        x, aux = forward(params, cfg, batch, dot=dot, return_hidden=True)
+        x, aux = forward(params, cfg, batch, ftc=ftc, return_hidden=True)
         table = params.get("lm_head", params["embed"]).astype(cfg.dtype)
         nll = streamed_cross_entropy(
-            x, table, batch["labels"], cfg.loss_chunks, cfg.vocab, unroll=cfg.unroll
+            x, table, batch["labels"], cfg.loss_chunks, cfg.vocab, unroll=cfg.unroll,
+            ftc=ftc,
         )
     else:
-        logits, aux = forward(params, cfg, batch, dot=dot)
+        logits, aux = forward(params, cfg, batch, ftc=ftc)
         nll = cross_entropy(logits, batch["labels"])
     loss = nll + aux_weight * aux
     return loss, {"loss": nll, "aux": aux}
@@ -442,10 +488,10 @@ def init_cache(cfg: LMConfig, batch: int, smax: int, dtype=jnp.bfloat16) -> Para
     raise ValueError(cfg.family)
 
 
-def _attn_decode(x, p, cfg: LMConfig, cache):
+def _attn_decode(x, p, cfg: LMConfig, cache, ftc: FTContext | None = None):
     if cfg.attn_kind == "mla":
-        return mla_decode(x, p, cfg.mla, cache)
-    return gqa_decode(x, p, cfg.attn_cfg, cache)
+        return mla_decode(x, p, cfg.mla, cache, ftc)
+    return gqa_decode(x, p, cfg.attn_cfg, cache, ftc)
 
 
 def _decode_scan(f, x, xs, cfg: LMConfig):
@@ -460,11 +506,11 @@ def _decode_scan(f, x, xs, cfg: LMConfig):
     return x, jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
 
 
-def _gated_dot(dot: Callable, flag: jax.Array) -> Callable:
-    """Per-layer protection gate: route through ``dot`` (the fault-aware array
-    path) when ``flag`` is set, else the plain matmul.  XLA CSEs the shared
-    plain matmul inside ``dot``, so the gate costs one select."""
-    return lambda a, b: jnp.where(flag, dot(a, b), jnp.matmul(a, b))
+def _concat_cache_parts(parts: list) -> Params:
+    """Re-join per-split cache slices along the leading layer axis."""
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *parts)
 
 
 def decode_step(
@@ -473,24 +519,20 @@ def decode_step(
     cache: Params,
     batch: dict,
     *,
-    dot: Callable | None = None,
-    protect_mask: jax.Array | None = None,
+    ftc: FTContext | None = None,
 ) -> tuple[jax.Array, Params]:
     """batch: {"token": (B, 1) int32}.  Returns (logits (B,1,V), new cache).
 
-    ``dot`` mirrors :func:`forward`'s injection hook: the dense FFN matmuls
-    run through it (serving threads the HyCA-protected matmul here).  As in
-    :func:`forward`, expert matmuls inside ``moe_forward`` are NOT routed
-    through ``dot`` — for the moe family only the ``first_k_dense`` blocks
-    touch the array path.  ``protect_mask`` (bool, one entry per main-stack
-    layer; dense/vlm families) gates ``dot`` per layer so only a
-    configurable fraction of layers runs on the protected array path.
+    ``ftc`` mirrors :func:`forward`'s execution context: every weight matmul
+    of the protected layer prefix — attention projections, FFN, MoE router +
+    experts, SSM/RWKV projections — plus the LM head routes through the
+    fault-aware dispatcher.  The ProtectPolicy's layer fraction splits the
+    main-stack scan statically, so unprotected layers lower plain matmuls.
     """
     tok = batch["token"]
     x = params["embed"].astype(cfg.dtype)[tok]
     x = shard(x, "batch", None, "embed")
     act = _ACTS[cfg.act]
-    d = jnp.matmul if dot is None else dot
 
     if cfg.family in ("dense", "vlm", "moe"):
         is_moe = cfg.family == "moe"
@@ -499,38 +541,39 @@ def decode_step(
             blocks = _cast(params["dense_blocks"], cfg.dtype)
             def fd(x, inp):
                 lp, c = inp
-                h, c2 = _attn_decode(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, c)
+                h, c2 = _attn_decode(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, c, ftc)
                 x = x + h
-                x = x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, dot=d)
+                x = x + ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, ftc=ftc)
                 return x, c2
             x, cd = _decode_scan(fd, x, (blocks, cache["attn_dense"]), cfg)
             new_cache["attn_dense"] = cd
-        blocks = _cast(params["blocks"], cfg.dtype)
-        def f(x, inp):
-            if protect_mask is None:
+        n_main = cfg.n_layers - cfg.first_k_dense
+        cache_parts = []
+        for lo, hi, fc in _layer_splits(n_main, ftc):
+            blocks = _cast(_slice_layers(params["blocks"], lo, hi), cfg.dtype)
+            def f(x, inp, fc=fc):
                 lp, c = inp
-                flag = None
-            else:
-                lp, c, flag = inp
-            h, c2 = _attn_decode(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, c)
-            x = x + h
-            if is_moe:
-                y, _ = moe_forward(_norm(x, lp["ln2"], cfg), lp["moe"], cfg.moe)
-            else:
-                dd = d if flag is None else _gated_dot(d, flag)
-                y = ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, dot=dd)
-            return shard(x + y, "batch", None, "embed"), c2
-        xs = (blocks, cache["attn"]) if protect_mask is None else (blocks, cache["attn"], protect_mask)
-        x, ca = _decode_scan(f, x, xs, cfg)
-        new_cache["attn"] = ca
+                h, c2 = _attn_decode(_norm(x, lp["ln1"], cfg), lp["attn"], cfg, c, fc)
+                x = x + h
+                if is_moe:
+                    y, _ = moe_forward(_norm(x, lp["ln2"], cfg), lp["moe"], cfg.moe, ftc=fc)
+                else:
+                    y = ffn(_norm(x, lp["ln2"], cfg), lp["ffn"], act=act, ftc=fc)
+                return shard(x + y, "batch", None, "embed"), c2
+            x, ca = _decode_scan(f, x, (blocks, _slice_layers(cache["attn"], lo, hi)), cfg)
+            cache_parts.append(ca)
+        new_cache["attn"] = _concat_cache_parts(cache_parts)
 
     elif cfg.family == "ssm":
-        blocks = _cast(params["blocks"], cfg.dtype)
-        def f(x, inp):
-            lp, c = inp
-            return rwkv6_decode(x, lp, cfg.rwkv, c)
-        x, cr = _decode_scan(f, x, (blocks, cache["rwkv"]), cfg)
-        new_cache = {"rwkv": cr}
+        cache_parts = []
+        for lo, hi, fc in _layer_splits(cfg.n_layers, ftc):
+            blocks = _cast(_slice_layers(params["blocks"], lo, hi), cfg.dtype)
+            def f(x, inp, fc=fc):
+                lp, c = inp
+                return rwkv6_decode(x, lp, cfg.rwkv, c, fc)
+            x, cr = _decode_scan(f, x, (blocks, _slice_layers(cache["rwkv"], lo, hi)), cfg)
+            cache_parts.append(cr)
+        new_cache = {"rwkv": _concat_cache_parts(cache_parts)}
 
     elif cfg.family == "hybrid":
         shared = _cast(params["shared"], cfg.dtype)
@@ -538,7 +581,7 @@ def decode_step(
         attn_caches = []
         def fm(x, inp):
             lp, c = inp
-            y, c2 = mamba2_decode(_norm(x, lp["ln"], cfg), lp["mamba"], cfg.ssm, c)
+            y, c2 = mamba2_decode(_norm(x, lp["ln"], cfg), lp["mamba"], cfg.ssm, c, ftc)
             return x + y, c2
         for gi, (start, length) in enumerate(_hybrid_groups(cfg)):
             blocks = _cast(jax.tree.map(lambda a: a[start : start + length], params["blocks"]), cfg.dtype)
@@ -546,9 +589,9 @@ def decode_step(
             x, c2 = _decode_scan(fm, x, (blocks, gcache), cfg)
             mamba_caches.append(c2)
             acache = jax.tree.map(lambda a: a[gi], cache["shared_attn"])
-            h, ac2 = _attn_decode(_norm(x, shared["ln1"], cfg), shared["attn"], cfg, acache)
+            h, ac2 = _attn_decode(_norm(x, shared["ln1"], cfg), shared["attn"], cfg, acache, ftc)
             x = x + h
-            x = x + ffn(_norm(x, shared["ln2"], cfg), shared["ffn"], act=act, dot=d)
+            x = x + ffn(_norm(x, shared["ln2"], cfg), shared["ffn"], act=act, ftc=ftc)
             attn_caches.append(ac2)
         new_cache = {
             "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *mamba_caches),
@@ -558,17 +601,20 @@ def decode_step(
     elif cfg.family == "encdec":
         enc = cache["enc"]
         xcfg = ed.CrossAttnConfig(cfg.d_model, cfg.n_heads)
-        blocks = _cast(params["blocks"], cfg.dtype)
-        def f(x, inp):
-            lp, c = inp
-            h, c2 = gqa_decode(layernorm(x, lp["ln1"]), lp["attn"], cfg.attn_cfg, c)
-            x = x + h
-            x = x + ed.cross_attn(layernorm(x, lp["ln_x"]), enc, lp["xattn"], xcfg)
-            x = x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu, dot=d)
-            return x, c2
-        x, ca = _decode_scan(f, x, (blocks, cache["attn"]), cfg)
-        new_cache = {"attn": ca, "enc": enc}
+        cache_parts = []
+        for lo, hi, fc in _layer_splits(cfg.n_layers, ftc):
+            blocks = _cast(_slice_layers(params["blocks"], lo, hi), cfg.dtype)
+            def f(x, inp, fc=fc):
+                lp, c = inp
+                h, c2 = gqa_decode(layernorm(x, lp["ln1"]), lp["attn"], cfg.attn_cfg, c, fc)
+                x = x + h
+                x = x + ed.cross_attn(layernorm(x, lp["ln_x"]), enc, lp["xattn"], xcfg, fc)
+                x = x + ffn(layernorm(x, lp["ln2"]), lp["ffn"], act=jax.nn.gelu, ftc=fc)
+                return x, c2
+            x, ca = _decode_scan(f, x, (blocks, _slice_layers(cache["attn"], lo, hi)), cfg)
+            cache_parts.append(ca)
+        new_cache = {"attn": _concat_cache_parts(cache_parts), "enc": enc}
     else:
         raise ValueError(cfg.family)
 
-    return _logits(x, params, cfg), new_cache
+    return _logits(x, params, cfg, ftc), new_cache

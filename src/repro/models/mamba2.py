@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import site_matmul
 from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init, scan_or_unroll
 
 
@@ -110,16 +111,16 @@ def ssd_chunked(x, dt, A_log, B, C, D, chunk: int, unroll: bool = False):
     return (y + D[None, None, :, None] * x.astype(jnp.float32)).astype(x.dtype)
 
 
-def mamba2_forward(x, p, cfg: Mamba2Config, unroll: bool = False) -> jax.Array:
+def mamba2_forward(x, p, cfg: Mamba2Config, unroll: bool = False, ftc=None) -> jax.Array:
     """x: (B, S, d) -> (B, S, d)."""
-    z, xs, B, C, dt = _split_in_proj(x @ p["in_proj"], cfg)
+    z, xs, B, C, dt = _split_in_proj(site_matmul(ftc, "ssm.in")(x, p["in_proj"]), cfg)
     b, s, _ = x.shape
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     xs = xs.reshape(b, s, cfg.n_heads, cfg.head_dim)
     y = ssd_chunked(xs, dt, p["A_log"], B, C, p["D"], cfg.chunk, unroll)
     y = y.reshape(b, s, cfg.d_inner)
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
-    return y @ p["out_proj"]
+    return site_matmul(ftc, "ssm.out")(y, p["out_proj"])
 
 
 # --------------------------------------------------------------------------- #
@@ -131,10 +132,10 @@ def mamba2_cache_init(cfg: Mamba2Config, batch: int, dtype=jnp.float32) -> Param
     }
 
 
-def mamba2_decode(x, p, cfg: Mamba2Config, cache: Params) -> tuple[jax.Array, Params]:
+def mamba2_decode(x, p, cfg: Mamba2Config, cache: Params, ftc=None) -> tuple[jax.Array, Params]:
     """x: (B,1,d). h = exp(dt a) h + dt B ⊗ x ; y = C·h + D x."""
     b = x.shape[0]
-    z, xs, B, C, dt = _split_in_proj((x @ p["in_proj"])[:, 0], cfg)
+    z, xs, B, C, dt = _split_in_proj(site_matmul(ftc, "ssm.in")(x, p["in_proj"])[:, 0], cfg)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,h)
     a = -jnp.exp(p["A_log"].astype(jnp.float32))
     xs = xs.reshape(b, cfg.n_heads, cfg.head_dim).astype(jnp.float32)
@@ -146,4 +147,4 @@ def mamba2_decode(x, p, cfg: Mamba2Config, cache: Params) -> tuple[jax.Array, Pa
     y = y + p["D"][None, :, None] * xs
     y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)[:, None, :], p["norm"])
-    return y @ p["out_proj"], {"ssm": S_new}
+    return site_matmul(ftc, "ssm.out")(y, p["out_proj"]), {"ssm": S_new}

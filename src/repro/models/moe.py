@@ -29,6 +29,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import site_matmul
 from repro.dist.sharding import shard
 from repro.models.layers import Params, dense_init, ffn, ffn_init
 
@@ -88,10 +89,12 @@ def _topk_dispatch(gates: jax.Array, top_k: int, capacity: int):
     return dispatch, combine
 
 
-def _group_forward(xg: jax.Array, p: Params, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+def _group_forward(
+    xg: jax.Array, p: Params, cfg: MoEConfig, ftc=None
+) -> tuple[jax.Array, jax.Array]:
     """xg: (B, G, d) one token group per batch row. Returns (out, aux)."""
     b, g, d = xg.shape
-    logits = (xg @ p["router"]).astype(jnp.float32)  # (B, G, E_pad)
+    logits = site_matmul(ftc, "moe.router")(xg, p["router"]).astype(jnp.float32)  # (B, G, E_pad)
     if cfg.n_padded != cfg.n_experts:  # mask padded experts out of routing
         dead = jnp.arange(cfg.n_padded) >= cfg.n_experts
         logits = jnp.where(dead, -1e30, logits)
@@ -100,9 +103,11 @@ def _group_forward(xg: jax.Array, p: Params, cfg: MoEConfig) -> tuple[jax.Array,
     dispatch, combine = _topk_dispatch(gates, cfg.top_k, capacity)
     xe = jnp.einsum("bgec,bgd->becd", dispatch.astype(xg.dtype), xg)  # (B,E,C,d)
     xe = shard(xe, "batch", "expert", None, None)
-    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["gate"].astype(xg.dtype)))
-    h = h * jnp.einsum("becd,edf->becf", xe, p["up"].astype(xg.dtype))
-    ye = jnp.einsum("becf,efd->becd", h, p["down"].astype(xg.dtype))
+    # per-expert matmuls: each expert is one virtual-array execution
+    ein = (lambda s, a, w: ftc.einsum(s, a, w, site="moe.expert")) if ftc is not None else jnp.einsum
+    h = jax.nn.silu(ein("becd,edf->becf", xe, p["gate"].astype(xg.dtype)))
+    h = h * ein("becd,edf->becf", xe, p["up"].astype(xg.dtype))
+    ye = ein("becf,efd->becd", h, p["down"].astype(xg.dtype))
     out = jnp.einsum("bgec,becd->bgd", combine.astype(xg.dtype), ye)
     # load-balancing aux loss (Switch-style), over real experts only
     me = gates[..., : cfg.n_experts].mean((0, 1))
@@ -112,7 +117,7 @@ def _group_forward(xg: jax.Array, p: Params, cfg: MoEConfig) -> tuple[jax.Array,
 
 
 def moe_forward(
-    x: jax.Array, p: Params, cfg: MoEConfig, *, unroll: bool = False
+    x: jax.Array, p: Params, cfg: MoEConfig, *, unroll: bool = False, ftc=None
 ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, d). Returns (out, aux_loss).  Tokens stream through dispatch
     groups of ``cfg.group_size`` within each batch row, so the batch axis
@@ -124,13 +129,13 @@ def moe_forward(
     n_groups = s // gsz
 
     if n_groups == 1:
-        out, aux = _group_forward(x, p, cfg)
-        return out + _shared(x, p), aux
+        out, aux = _group_forward(x, p, cfg, ftc)
+        return out + _shared(x, p, ftc), aux
 
     xg = jnp.moveaxis(x.reshape(b, n_groups, gsz, d), 1, 0)  # (n_g, B, G, d)
 
     def body(carry, xgi):
-        out, aux = _group_forward(xgi, p, cfg)
+        out, aux = _group_forward(xgi, p, cfg, ftc)
         return carry + aux, out
 
     if unroll:
@@ -143,8 +148,8 @@ def moe_forward(
     else:
         aux_sum, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xg)
     out = jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
-    return out + _shared(x, p), aux_sum / n_groups
+    return out + _shared(x, p, ftc), aux_sum / n_groups
 
 
-def _shared(x: jax.Array, p: Params) -> jax.Array:
-    return ffn(x, p["shared"]) if "shared" in p else jnp.zeros_like(x)
+def _shared(x: jax.Array, p: Params, ftc=None) -> jax.Array:
+    return ffn(x, p["shared"], ftc=ftc) if "shared" in p else jnp.zeros_like(x)

@@ -18,6 +18,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.ftcontext import site_matmul
 from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init, scan_or_unroll
 
 CHUNK = 16
@@ -69,16 +70,17 @@ def _token_shift(x: jax.Array, x_prev: jax.Array | None = None) -> jax.Array:
     return jnp.concatenate([pad, x[:, :-1]], axis=1)
 
 
-def _rkvwg(x, xs, p, cfg: RWKV6Config):
+def _rkvwg(x, xs, p, cfg: RWKV6Config, ftc=None):
     mix = lambda i: x + (xs - x) * p["mu"][i]
-    r = mix(0) @ p["wr"]
-    k = mix(1) @ p["wk"]
-    v = mix(2) @ p["wv"]
+    mm = site_matmul(ftc, "ssm.in")
+    r = mm(mix(0), p["wr"])
+    k = mm(mix(1), p["wk"])
+    v = mm(mix(2), p["wv"])
     logw = -jnp.exp(
-        p["w0"] + jnp.tanh((mix(3) @ p["w_a"]).astype(jnp.float32)) @ p["w_b"]
+        p["w0"] + mm(jnp.tanh(mm(mix(3), p["w_a"]).astype(jnp.float32)), p["w_b"])
     )
     logw = jnp.maximum(logw, LOGW_MIN)
-    g = jax.nn.silu((mix(4) @ p["wg"]).astype(jnp.float32))
+    g = jax.nn.silu(mm(mix(4), p["wg"]).astype(jnp.float32))
     b, s, d = x.shape
     h, dk = cfg.n_heads, cfg.head_dim
     shp = (b, s, h, dk)
@@ -144,29 +146,30 @@ def wkv_recurrent(r, k, v, logw, u, state=None):
     return ys.swapaxes(0, 1), S_fin
 
 
-def rwkv6_time_mix(x, p, cfg: RWKV6Config, *, chunked: bool = True, unroll: bool = False):
+def rwkv6_time_mix(x, p, cfg: RWKV6Config, *, chunked: bool = True, unroll: bool = False, ftc=None):
     xs = _token_shift(x)
-    r, k, v, logw, g = _rkvwg(x, xs, p, cfg)
+    r, k, v, logw, g = _rkvwg(x, xs, p, cfg, ftc)
     if chunked:
         y, _ = wkv_chunked(r, k, v, logw, p["u"], unroll=unroll)
     else:
         y, _ = wkv_recurrent(r, k, v, logw, p["u"])
     b, s, _ = x.shape
     y = rmsnorm(y.reshape(b, s, cfg.d_model), p["ln_x"])
-    return ((y * g).astype(x.dtype)) @ p["wo"]
+    return site_matmul(ftc, "ssm.out")((y * g).astype(x.dtype), p["wo"])
 
 
-def rwkv6_channel_mix(x, p):
+def rwkv6_channel_mix(x, p, ftc=None):
     xs = _token_shift(x)
     xk = x + (xs - x) * p["mu_ff"][0]
     xr = x + (xs - x) * p["mu_ff"][1]
-    kk = jnp.square(jax.nn.relu(xk @ p["ffk"]))
-    return jax.nn.sigmoid(xr @ p["ffr"]) * (kk @ p["ffv"])
+    mm = site_matmul(ftc, "ffn")
+    kk = jnp.square(jax.nn.relu(mm(xk, p["ffk"])))
+    return jax.nn.sigmoid(mm(xr, p["ffr"])) * mm(kk, p["ffv"])
 
 
-def rwkv6_forward(x, p, cfg: RWKV6Config, *, chunked: bool = True, unroll: bool = False):
-    x = x + rwkv6_time_mix(rmsnorm(x, p["ln1"]), p, cfg, chunked=chunked, unroll=unroll)
-    return x + rwkv6_channel_mix(rmsnorm(x, p["ln2"]), p)
+def rwkv6_forward(x, p, cfg: RWKV6Config, *, chunked: bool = True, unroll: bool = False, ftc=None):
+    x = x + rwkv6_time_mix(rmsnorm(x, p["ln1"]), p, cfg, chunked=chunked, unroll=unroll, ftc=ftc)
+    return x + rwkv6_channel_mix(rmsnorm(x, p["ln2"]), p, ftc)
 
 
 # --------------------------------------------------------------------------- #
@@ -181,20 +184,21 @@ def rwkv6_cache_init(cfg: RWKV6Config, batch: int) -> Params:
     }
 
 
-def rwkv6_decode(x, p, cfg: RWKV6Config, cache: Params):
+def rwkv6_decode(x, p, cfg: RWKV6Config, cache: Params, ftc=None):
     """x: (B, 1, d)."""
     xn = rmsnorm(x, p["ln1"])
     xs = cache["x_tm"][:, None, :].astype(x.dtype)
-    r, k, v, logw, g = _rkvwg(xn, xs, p, cfg)
+    r, k, v, logw, g = _rkvwg(xn, xs, p, cfg, ftc)
     y, S_new = wkv_recurrent(r, k, v, logw, p["u"], cache["S"])
     b = x.shape[0]
     y = rmsnorm(y.reshape(b, 1, cfg.d_model), p["ln_x"])
-    x1 = x + ((y * g).astype(x.dtype)) @ p["wo"]
+    x1 = x + site_matmul(ftc, "ssm.out")((y * g).astype(x.dtype), p["wo"])
     x1n = rmsnorm(x1, p["ln2"])
     xs2 = cache["x_cm"][:, None, :].astype(x.dtype)
     xk = x1n + (xs2 - x1n) * p["mu_ff"][0]
     xr = x1n + (xs2 - x1n) * p["mu_ff"][1]
-    kk = jnp.square(jax.nn.relu(xk @ p["ffk"]))
-    out = x1 + jax.nn.sigmoid(xr @ p["ffr"]) * (kk @ p["ffv"])
+    mm = site_matmul(ftc, "ffn")
+    kk = jnp.square(jax.nn.relu(mm(xk, p["ffk"])))
+    out = x1 + jax.nn.sigmoid(mm(xr, p["ffr"])) * mm(kk, p["ffv"])
     new_cache = {"S": S_new, "x_tm": xn[:, 0].astype(jnp.float32), "x_cm": x1n[:, 0].astype(jnp.float32)}
     return out, new_cache

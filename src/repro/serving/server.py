@@ -10,11 +10,13 @@ The step loop wires the scheduler and fault manager around one jitted decode:
                                  number of decode slots admission may fill;
       4. admission             — freed slots take queued requests (their KV
                                  cache slots are zeroed in place);
-      5. batched decode        — ONE decode_step over all slots; every FFN
-                                 matmul of the protected layer fraction runs
-                                 through the HyCA virtual array
-                                 (engine.hyca_matmul), corrupted by whatever
-                                 faults the runtime has not yet confirmed;
+      5. batched decode        — ONE decode_step over all slots; every weight
+                                 matmul of the protected layer fraction
+                                 (attention projections, FFN, experts, LM
+                                 head) runs through the FTContext dispatcher
+                                 on the HyCA virtual array, corrupted by
+                                 whatever faults the runtime has not yet
+                                 confirmed;
       6. commit                — prefill slots advance a prompt token, decode
                                  slots append the sampled token, finished
                                  requests free their slots.
@@ -42,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.engine import FaultState, HyCAConfig, hyca_matmul
+from repro.core.engine import FaultState, HyCAConfig, empty_fault_state
+from repro.core.ftcontext import ProtectPolicy, build_ftcontext
 from repro.core.redundancy import DPPUConfig
 from repro.models.lm import LMConfig, decode_step, init_cache, init_params
 from repro.serving.fault_manager import FaultInjector, FaultManager, FaultManagerConfig
@@ -61,6 +64,7 @@ class ServerConfig:
     cols: int = 8
     dppu_size: int = 4             # DPPU capacity ~= repairable faults
     protect_fraction: float = 1.0  # fraction of main-stack layers on the array
+    dispatch: str = "twopass"      # twopass | fused (FTContext kernel dispatch)
     confirm_hits: int = 2
     bist: bool = True              # power-on: confirm the factory fault map
     boot_scan: bool = False        # probe-based power-on sweep instead
@@ -89,28 +93,22 @@ class ModelBundle:
         self.lm = lm or get_smoke_config(cfg.arch)
         self.hyca = cfg.hyca()
         self.params = init_params(jax.random.key(cfg.seed), self.lm)
-        n_main = self.lm.n_layers - self.lm.first_k_dense
-        k = int(np.ceil(cfg.protect_fraction * n_main))
-        self.protect_mask = jnp.asarray(np.arange(n_main) < k)
         self.max_faults = cfg.rows * cfg.cols
-        self.empty_state = FaultState(
-            jnp.full((self.max_faults, 2), -1, jnp.int32),
-            jnp.zeros(self.max_faults, jnp.int32),
-            jnp.zeros(self.max_faults, jnp.int32),
+        self.empty_state = empty_fault_state(self.max_faults)
+        # One FTContext per bundle: static dispatch/policy chosen here; the
+        # per-step fault table is swapped in with with_state (a traced leaf,
+        # so the jitted step never recompiles on fault-table updates).
+        self.ftc = build_ftcontext(
+            self.empty_state, self.hyca,
+            policy=ProtectPolicy(layer_fraction=cfg.protect_fraction),
+            dispatch=cfg.dispatch,
         )
 
-        lmc, hyca, mask = self.lm, self.hyca, self.protect_mask
-
-        def array_dot(fstate):
-            def d(a, b):
-                out = hyca_matmul(a.reshape(-1, a.shape[-1]), b, fstate, cfg=hyca)
-                return out.reshape(*a.shape[:-1], b.shape[-1]).astype(a.dtype)
-            return d
+        lmc, ftc = self.lm, self.ftc
 
         def _step(params, cache, tok, fstate):
             return decode_step(
-                params, lmc, cache, {"token": tok},
-                dot=array_dot(fstate), protect_mask=mask,
+                params, lmc, cache, {"token": tok}, ftc=ftc.with_state(fstate)
             )
 
         def _reset(cache, slot):

@@ -1,0 +1,388 @@
+"""FTContext acceptance tests — the unified fault-aware execution layer.
+
+  * ALL ten registry configs: forward + decode_step under
+    FTContext(mode="protected") are bit-exact with mode="off" while
+    faults <= DPPU capacity — in BOTH two-pass and fused dispatch modes;
+  * the fused Pallas kernel dispatch (interpret mode) matches the two-pass
+    engine output elementwise, and the pure-jnp fused fallback is
+    bit-identical to the engine in every mode;
+  * per-site coverage: corrupting exactly one protection site visibly
+    changes the output — proof each site is actually wired to the array;
+  * the ProtectPolicy layer prefix is static (empty site set == plain run);
+  * FaultState FPT entries are validated against the array geometry.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.engine import (
+    FaultState,
+    HyCAConfig,
+    empty_fault_state,
+    fault_state_from_map,
+    hyca_matmul,
+    validate_fault_state,
+)
+from repro.core.ftcontext import FTContext, ProtectPolicy, SITES, build_ftcontext
+from repro.core.redundancy import DPPUConfig
+from repro.models.lm import decode_step, forward, init_cache, init_params
+
+ROWS = COLS = 8
+
+
+def _hyca(mode: str, dppu: int = 8) -> HyCAConfig:
+    return HyCAConfig(
+        rows=ROWS, cols=COLS, dppu=DPPUConfig(size=dppu, group_size=min(8, dppu)),
+        mode=mode,
+    )
+
+
+def _state(n_faults: int, seed: int, visible: bool = False, pad_to: int | None = None) -> FaultState:
+    rng = np.random.default_rng(seed)
+    fmap = np.zeros((ROWS, COLS), bool)
+    idx = rng.choice(ROWS * COLS, size=n_faults, replace=False)
+    fmap.reshape(-1)[idx] = True
+    st = fault_state_from_map(fmap, max_faults=pad_to or max(n_faults, 1), rng=rng)
+    if visible:  # high-exponent stuck-at-1: corruption shows on any value
+        st = dataclasses.replace(
+            st,
+            stuck_bit=jnp.full(st.max_faults, 30, jnp.int32),
+            stuck_val=jnp.ones(st.max_faults, jnp.int32),
+        )
+    return st
+
+
+def _f32(cfg):
+    """Smoke config at f32 compute so bit-exactness is well-defined."""
+    return dataclasses.replace(cfg, dtype=jnp.float32)
+
+
+def _seq_for(cfg) -> int:
+    # vlm splices n_patches patch embeddings over the sequence prefix: the
+    # sequence must be at least that long
+    return max(8, cfg.n_patches)
+
+
+def _batch_for(cfg, B, S, rng):
+    b = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_len, cfg.d_model)) * 0.02, jnp.float32
+        )
+    if cfg.family == "vlm":
+        b["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_vision)) * 0.02, jnp.float32
+        )
+    return b
+
+
+# --------------------------------------------------------------------------- #
+# the headline claim, model-wide: protected == off across every family
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dispatch", ["twopass", "fused"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_all_families_protected_bitexact_forward_and_decode(arch, dispatch, rng):
+    """Mode is a data difference: ``off`` is the SAME protected context fed
+    the fault-free (empty) table, so both runs execute the identical compiled
+    program and the comparison is bit-exact by construction wherever repair
+    really restores every corrupted output.  The plain ``ftc=None`` path is a
+    structurally different XLA program — it matches to float tolerance (CPU
+    fusion may reassociate a dot by 1 ulp), asserted separately."""
+    cfg = _f32(get_smoke_config(arch))
+    B, S = 1, _seq_for(cfg)
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, B, S, rng)
+    n_faults = 4
+    state = _state(n_faults, seed=3, visible=True)
+    assert n_faults <= _hyca("protected").capacity
+
+    ftc_p = build_ftcontext(state, _hyca("protected"), dispatch=dispatch)
+    ftc_off = ftc_p.with_state(empty_fault_state(state.max_faults))
+
+    ref, _ = forward(params, cfg, batch)  # no context at all: production path
+    off, _ = forward(params, cfg, batch, ftc=ftc_off)
+    prot, _ = forward(params, cfg, batch, ftc=ftc_p)
+    np.testing.assert_array_equal(np.asarray(prot), np.asarray(off))
+    np.testing.assert_allclose(np.asarray(off), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    cache = init_cache(cfg, B, S + 1, dtype=jnp.float32)
+    tok = batch["tokens"][:, :1]
+    lg_ref, _ = decode_step(params, cfg, cache, {"token": tok})
+    lg_off, _ = decode_step(params, cfg, cache, {"token": tok}, ftc=ftc_off)
+    lg_p, _ = decode_step(params, cfg, cache, {"token": tok}, ftc=ftc_p)
+    np.testing.assert_array_equal(np.asarray(lg_p), np.asarray(lg_off))
+    np.testing.assert_allclose(np.asarray(lg_off), np.asarray(lg_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_loss_label_logit_on_fault_path(rng):
+    """streamed_cross_entropy: with a context active, the label logit is
+    gathered from the same (possibly corrupted) chunk panels as the
+    normalizer — protected stays bit-exact with the fault-free run, and an
+    unprotected fault moves the loss (numerator and denominator together)."""
+    from repro.models.lm import loss_fn
+
+    cfg = dataclasses.replace(_f32(get_smoke_config("qwen1.5-0.5b")), loss_chunks=2)
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, 1, _seq_for(cfg), rng)
+    state = _state(ROWS * COLS, seed=5, visible=True)
+    ftc_p = build_ftcontext(state, _hyca("protected"))
+    ftc_off = ftc_p.with_state(empty_fault_state(state.max_faults))
+    loss_off, _ = loss_fn(params, cfg, batch, ftc=ftc_off)
+    # protected within capacity: bit-exact with the fault-free run (same
+    # FPT shape as the empty reference table -> same compiled program)
+    st4 = _state(4, seed=3, visible=True, pad_to=state.max_faults)
+    loss_p, _ = loss_fn(params, cfg, batch, ftc=ftc_p.with_state(st4))
+    np.testing.assert_array_equal(np.asarray(loss_p), np.asarray(loss_off))
+    # unprotected: the corrupted head moves the loss
+    ftc_u = build_ftcontext(state, _hyca("unprotected"))
+    loss_u, _ = loss_fn(params, cfg, batch, ftc=ftc_u)
+    assert not np.array_equal(np.asarray(loss_u), np.asarray(loss_off))
+
+
+def test_unprotected_context_corrupts_output(rng):
+    """Sanity: the same context in unprotected mode visibly corrupts —
+    bit-exactness above is not vacuous."""
+    cfg = _f32(get_smoke_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, 1, _seq_for(cfg), rng)
+    state = _state(16, seed=3, visible=True)
+    ftc_u = build_ftcontext(state, _hyca("unprotected"))
+    ref, _ = forward(params, cfg, batch)
+    bad, _ = forward(params, cfg, batch, ftc=ftc_u)
+    assert not np.array_equal(np.asarray(bad), np.asarray(ref))
+
+
+# --------------------------------------------------------------------------- #
+# dispatch equivalence: fused (kernel + ref fallback) vs two-pass engine
+# --------------------------------------------------------------------------- #
+def _bits_equal(a, b) -> bool:
+    """Bit-pattern equality: corrupted outputs can be NaN (stuck-at on the
+    exponent), and IEEE NaN != NaN would fail a plain array_equal even on
+    identical bits."""
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and np.array_equal(
+        a.view(np.int32) if a.dtype == np.float32 else a,
+        b.view(np.int32) if b.dtype == np.float32 else b,
+    )
+
+
+def test_fused_ref_fallback_matches_twopass_all_modes(rng):
+    """The fused dispatch's pure-jnp fallback is element-granular: it must be
+    bit-identical to the two-pass engine in off/protected/unprotected."""
+    x = jnp.asarray(rng.standard_normal((48, 40)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((40, 24)), jnp.float32)
+    state = _state(6, seed=11, visible=True)
+    for mode in ("off", "protected", "unprotected"):
+        two = build_ftcontext(state, _hyca(mode), dispatch="twopass")
+        fused = build_ftcontext(state, _hyca(mode), dispatch="fused")
+        assert fused.fused_backend == "ref"  # CPU container
+        assert _bits_equal(
+            two.matmul(x, w, site="ffn"), fused.matmul(x, w, site="ffn")
+        ), mode
+
+
+def test_fused_kernel_interpret_matches_twopass_elementwise(rng):
+    """The actual Pallas kernel (interpret mode on CPU): protected within
+    capacity must match the two-pass hyca_matmul output elementwise."""
+    x = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+    state = _state(5, seed=7, visible=True)
+    cfg = _hyca("protected")
+    ftc = dataclasses.replace(
+        build_ftcontext(state, cfg, dispatch="fused"),
+        fused_backend="interpret",  # force the kernel body on CPU
+    )
+    fused = ftc.matmul(x, w, site="ffn")
+    two = hyca_matmul(x, w, state, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(two))
+
+
+def test_fused_kernel_interpret_pads_odd_shapes(rng):
+    """Non-block-multiple shapes are zero-padded and sliced back."""
+    x = jnp.asarray(rng.standard_normal((37, 65)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((65, 50)), jnp.float32)
+    state = _state(3, seed=9, visible=True)
+    cfg = _hyca("protected")
+    ftc = dataclasses.replace(
+        build_ftcontext(state, cfg, dispatch="fused"), fused_backend="interpret"
+    )
+    out = ftc.matmul(x, w, site="ffn")
+    assert out.shape == (37, 50)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.matmul(x, w)), rtol=1e-6, atol=1e-6
+    )
+
+
+# --------------------------------------------------------------------------- #
+# per-site coverage: every protection site is actually wired to the array
+# --------------------------------------------------------------------------- #
+COVERAGE = [
+    ("qwen1.5-0.5b", "attn.qkv"),
+    ("qwen1.5-0.5b", "attn.out"),
+    ("qwen1.5-0.5b", "ffn"),
+    ("qwen1.5-0.5b", "head"),
+    ("minicpm3-4b", "attn.qkv"),        # MLA LoRA projections
+    ("deepseek-moe-16b", "moe.expert"),
+    ("deepseek-moe-16b", "moe.router"),
+    ("rwkv6-7b", "ssm.in"),
+    ("rwkv6-7b", "ssm.out"),
+    ("zamba2-1.2b", "ssm.in"),          # mamba2 in_proj
+    ("whisper-tiny", "attn.qkv"),
+    ("llava-next-mistral-7b", "mm.proj"),
+]
+
+
+@pytest.mark.parametrize("arch,site", COVERAGE)
+def test_site_coverage_corruption_reaches_output(arch, site, rng):
+    """Protect ONLY one site, corrupt every PE: the output must change —
+    i.e. that site's matmuls really run on the virtual array.  (The old
+    ``dot`` hook reached none of these except the dense FFN.)"""
+    cfg = _f32(get_smoke_config(arch))
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, 1, _seq_for(cfg), rng)
+    state = _state(ROWS * COLS, seed=5, visible=True)  # every PE faulty
+    ftc = build_ftcontext(
+        state, _hyca("unprotected"),
+        policy=ProtectPolicy(sites=frozenset({site})),
+    )
+    ref, _ = forward(params, cfg, batch)
+    bad, _ = forward(params, cfg, batch, ftc=ftc)
+    assert not np.array_equal(np.asarray(bad), np.asarray(ref)), (arch, site)
+
+
+# --------------------------------------------------------------------------- #
+# policy: static gating — unprotected sites/layers are plain matmuls
+# --------------------------------------------------------------------------- #
+def test_empty_site_set_is_plain_run(rng):
+    """No covered site -> bit-identical to the no-context production path,
+    even with every PE faulty (the policy decision is static, not a traced
+    select over both branches)."""
+    cfg = _f32(get_smoke_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, 1, _seq_for(cfg), rng)
+    state = _state(ROWS * COLS, seed=5, visible=True)
+    ftc = build_ftcontext(
+        state, _hyca("unprotected"), policy=ProtectPolicy(sites=frozenset())
+    )
+    ref, _ = forward(params, cfg, batch)
+    out, _ = forward(params, cfg, batch, ftc=ftc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_layer_fraction_prefix_gates_main_stack(rng):
+    """fraction=0 with main-stack-only sites == plain; fraction=1 differs."""
+    cfg = _f32(get_smoke_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, 1, _seq_for(cfg), rng)
+    state = _state(ROWS * COLS, seed=5, visible=True)
+    sites = frozenset({"attn.qkv", "attn.out", "ffn"})
+    ref, _ = forward(params, cfg, batch)
+    for frac, expect_equal in [(0.0, True), (1.0, False)]:
+        ftc = build_ftcontext(
+            state, _hyca("unprotected"),
+            policy=ProtectPolicy(sites=sites, layer_fraction=frac),
+        )
+        out, _ = forward(params, cfg, batch, ftc=ftc)
+        assert np.array_equal(np.asarray(out), np.asarray(ref)) == expect_equal, frac
+
+
+def test_partial_layer_fraction_protected_still_bitexact(rng):
+    """Half-protected stack keeps the invariant: protected == off."""
+    cfg = _f32(get_smoke_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch_for(cfg, 1, _seq_for(cfg), rng)
+    state = _state(4, seed=3, visible=True)
+    pol = ProtectPolicy(layer_fraction=0.5)
+    ftc_p = build_ftcontext(state, _hyca("protected"), policy=pol)
+    ftc_off = ftc_p.with_state(empty_fault_state(state.max_faults))
+    ref, _ = forward(params, cfg, batch, ftc=ftc_off)
+    prot, _ = forward(params, cfg, batch, ftc=ftc_p)
+    np.testing.assert_array_equal(np.asarray(prot), np.asarray(ref))
+    cache = init_cache(cfg, 1, 9, dtype=jnp.float32)
+    tok = batch["tokens"][:, :1]
+    lg_ref, c_ref = decode_step(params, cfg, cache, {"token": tok}, ftc=ftc_off)
+    lg_p, c_p = decode_step(params, cfg, cache, {"token": tok}, ftc=ftc_p)
+    np.testing.assert_array_equal(np.asarray(lg_p), np.asarray(lg_ref))
+    # the split-scan cache re-join preserves structure and contents
+    assert jax.tree.structure(c_ref) == jax.tree.structure(c_p)
+    for a, b in zip(jax.tree.leaves(c_ref), jax.tree.leaves(c_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# FaultState validation (no silent % wraparound)
+# --------------------------------------------------------------------------- #
+def test_fpt_out_of_bounds_raises_at_context_build():
+    state = FaultState(
+        jnp.asarray([[9, 2]], jnp.int32),  # row 9 on an 8x8 array
+        jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+    )
+    with pytest.raises(ValueError, match="out of bounds"):
+        build_ftcontext(state, _hyca("protected"))
+
+
+def test_fpt_out_of_bounds_raises_in_eager_hyca_matmul(rng):
+    state = FaultState(
+        jnp.asarray([[2, 64]], jnp.int32),  # col 64 on an 8x8 array
+        jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+    )
+    x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    with pytest.raises(ValueError, match="out of bounds"):
+        hyca_matmul(x, x, state, cfg=_hyca("protected"))
+
+
+def test_fpt_negative_col_with_valid_row_raises():
+    state = FaultState(
+        jnp.asarray([[2, -1]], jnp.int32),
+        jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32),
+    )
+    with pytest.raises(ValueError, match="out of bounds"):
+        validate_fault_state(state, ROWS, COLS)
+
+
+def test_valid_and_padded_fpt_passes():
+    state = FaultState(
+        jnp.asarray([[7, 7], [-1, -1]], jnp.int32),
+        jnp.zeros(2, jnp.int32), jnp.zeros(2, jnp.int32),
+    )
+    validate_fault_state(state, ROWS, COLS)  # no raise
+
+
+def test_unknown_site_and_policy_validation():
+    with pytest.raises(ValueError, match="unknown protection sites"):
+        ProtectPolicy(sites=frozenset({"nonexistent.site"}))
+    with pytest.raises(ValueError, match="layer_fraction"):
+        ProtectPolicy(layer_fraction=1.5)
+    ftc = build_ftcontext(_state(1, 0), _hyca("protected"))
+    with pytest.raises(ValueError, match="unknown site"):
+        ftc.matmul(jnp.zeros((2, 2)), jnp.zeros((2, 2)), site="bogus")
+    assert set(SITES) >= {"attn.qkv", "ffn", "moe.expert", "head"}
+
+
+# --------------------------------------------------------------------------- #
+# jit behaviour: FTContext is a pytree; fault-table swaps don't retrace
+# --------------------------------------------------------------------------- #
+def test_ftcontext_jit_no_retrace_on_state_swap(rng):
+    cfg = _hyca("protected")
+    traces = []
+
+    @jax.jit
+    def f(ftc, x, w):
+        traces.append(1)
+        return ftc.matmul(x, w, site="ffn")
+
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    base = build_ftcontext(_state(2, seed=1), cfg)
+    f(base, x, w)
+    f(base.with_state(_state(2, seed=2)), x, w)  # new fault values
+    assert len(traces) == 1  # leaf-only change: no recompile
+    f(dataclasses.replace(base, dispatch="fused"), x, w)  # static change
+    assert len(traces) == 2

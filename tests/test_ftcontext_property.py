@@ -1,0 +1,115 @@
+"""Property tests (hypothesis) for the FTContext bit-exactness invariant.
+
+Randomised fault tables over every registry config: ``protected`` forward and
+decode_step are bit-exact with ``off`` while #faults <= DPPU capacity, in
+both two-pass and fused dispatch modes.  The deterministic counterparts live
+in test_ftcontext.py; this module fuzzes fault placement / stuck-at
+signatures / fault counts.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.engine import HyCAConfig, empty_fault_state, fault_state_from_map, hyca_matmul
+from repro.core.ftcontext import build_ftcontext
+from repro.core.redundancy import DPPUConfig
+from repro.models.lm import decode_step, forward, init_cache, init_params
+
+ROWS = COLS = 8
+HYCA_OFF = HyCAConfig(rows=ROWS, cols=COLS, dppu=DPPUConfig(size=8, group_size=8), mode="off")
+HYCA_P = dataclasses.replace(HYCA_OFF, mode="protected")
+CAPACITY = HYCA_P.capacity
+
+_PARAMS: dict = {}   # per-arch param/batch cache — hypothesis re-runs bodies
+
+
+def _setup(arch):
+    if arch not in _PARAMS:
+        cfg = dataclasses.replace(get_smoke_config(arch), dtype=jnp.float32)
+        rng = np.random.default_rng(0)
+        params = init_params(jax.random.key(0), cfg)
+        s = max(8, cfg.n_patches)  # vlm splices n_patches over the prefix
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (1, s)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (1, s)), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((1, cfg.enc_len, cfg.d_model)) * 0.02, jnp.float32
+            )
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.asarray(
+                rng.standard_normal((1, cfg.n_patches, cfg.d_vision)) * 0.02, jnp.float32
+            )
+        cache = init_cache(cfg, 1, 2 + batch["tokens"].shape[1], dtype=jnp.float32)
+        refs = {}
+        for dispatch in ("twopass", "fused"):
+            # reference = the SAME protected context on the fault-free array
+            # (mode as data: identical compiled program, empty fault table)
+            ftc_off = build_ftcontext(empty_fault_state(CAPACITY), HYCA_P, dispatch=dispatch)
+            ref_fwd, _ = forward(params, cfg, batch, ftc=ftc_off)
+            ref_dec, _ = decode_step(
+                params, cfg, cache, {"token": batch["tokens"][:, :1]}, ftc=ftc_off
+            )
+            refs[dispatch] = (np.asarray(ref_fwd), np.asarray(ref_dec))
+        _PARAMS[arch] = (cfg, params, batch, cache, refs)
+    return _PARAMS[arch]
+
+
+def _random_state(seed: int):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(0, CAPACITY + 1))  # always within capacity
+    fmap = np.zeros((ROWS, COLS), bool)
+    if n:
+        fmap.reshape(-1)[rng.choice(ROWS * COLS, size=n, replace=False)] = True
+    # fixed FPT shape == the reference's empty table: state swaps are pure
+    # data, the compiled program is shared with the fault-free run
+    return fault_state_from_map(fmap, max_faults=CAPACITY, rng=rng), n
+
+
+@pytest.mark.parametrize("dispatch", ["twopass", "fused"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=3, deadline=None)
+def test_protected_bitexact_property(arch, dispatch, seed):
+    cfg, params, batch, cache, refs = _setup(arch)
+    ref_fwd, ref_dec = refs[dispatch]
+    state, n = _random_state(seed)
+    assert n <= CAPACITY
+    ftc = build_ftcontext(state, HYCA_P, dispatch=dispatch)
+    prot, _ = forward(params, cfg, batch, ftc=ftc)
+    np.testing.assert_array_equal(np.asarray(prot), ref_fwd)
+    lg, _ = decode_step(params, cfg, cache, {"token": batch["tokens"][:, :1]}, ftc=ftc)
+    np.testing.assert_array_equal(np.asarray(lg), ref_dec)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fused_dispatch_matches_twopass_property(seed):
+    """Fused dispatch (kernel fallback chosen at build) vs the two-pass
+    engine: elementwise-identical in every mode, random shapes/faults."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 6)) * 8
+    k = int(rng.integers(1, 6)) * 8
+    n = int(rng.integers(1, 6)) * 8
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    nf = int(rng.integers(0, ROWS * COLS))
+    fmap = np.zeros((ROWS, COLS), bool)
+    if nf:
+        fmap.reshape(-1)[rng.choice(ROWS * COLS, size=nf, replace=False)] = True
+    state = fault_state_from_map(fmap, max_faults=max(nf, 1), rng=rng)
+    mode = ("off", "protected", "unprotected")[seed % 3]
+    hyca = dataclasses.replace(HYCA_OFF, mode=mode)
+    fused = build_ftcontext(state, hyca, dispatch="fused")
+    a = np.asarray(fused.matmul(x, w, site="ffn"))
+    b = np.asarray(hyca_matmul(x, w, state, cfg=hyca).astype(x.dtype))
+    # bit-pattern compare: corrupted outputs can be NaN (NaN != NaN)
+    np.testing.assert_array_equal(a.view(np.int32), b.view(np.int32))
