@@ -44,4 +44,37 @@ def run(quick: bool = False) -> dict:
         all(ffp["grouped"][s] >= ffp["unified"][s] - 0.02 for s in (24, 40, 48)),
         f"grouped={ffp['grouped']}, unified={ffp['unified']}",
     )
-    return {"capacity": caps, "ffp": ffp, "per": per, "claims": c.items, "all_ok": c.all_ok}
+
+    # grouping also buys scan parallelism: p reserved groups probe p PEs per
+    # cycle, and the runtime ScanEngine achieves exactly the analytical
+    # ceil(Row*Col/p) + Col — the model and the engine agree by construction
+    from repro.core.detection import detection_cycles
+    from repro.core.scan import build_scan_engine
+
+    scan_cycles = {}
+    engine_agrees = True
+    for block in (1, 2, 4, 8, 16, 32):
+        engine = build_scan_engine(32, 32, block_rows=block)
+        p = engine.cfg.dppu_groups
+        scan_cycles[p] = detection_cycles(32, 32, dppu_groups=p)
+        # independent derivations: the engine's actual lax.scan length
+        # (rows // block_rows probe steps) + the Col drain vs the model's
+        # ceil(Row*Col/p) + Col
+        achieved = engine.cfg.steps_per_sweep + 32
+        engine_agrees &= achieved == scan_cycles[p]
+    c.check(
+        "ScanEngine sweep latency equals the p-parallel cycle model at every grouping",
+        engine_agrees,
+        str(scan_cycles),
+    )
+    ps = sorted(scan_cycles)
+    c.check(
+        "scan latency strictly decreases with the scan-group count",
+        all(scan_cycles[a] > scan_cycles[b] for a, b in zip(ps, ps[1:])),
+        str(scan_cycles),
+    )
+    return {
+        "capacity": caps, "ffp": ffp, "per": per,
+        "scan_cycles_by_groups": scan_cycles,
+        "claims": c.items, "all_ok": c.all_ok,
+    }

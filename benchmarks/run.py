@@ -30,6 +30,7 @@ def main(argv=None) -> int:
         fig13_runtime_vs_size,
         fig14_scalability,
         fig15_dppu_grouping,
+        scan_latency,
         serving_goodput,
         tab01_detection,
     )
@@ -48,6 +49,7 @@ def main(argv=None) -> int:
         "cluster_ffp": cluster_ffp.run,
         "serving_goodput": serving_goodput.run,
         "ft_overhead": ft_overhead.run,
+        "scan_latency": scan_latency.run,
     }
     if args.only:
         keep = set(args.only.split(","))

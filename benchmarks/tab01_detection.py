@@ -55,4 +55,47 @@ def run(quick: bool = False) -> dict:
         "scan time is Row*Col + Col cycles",
         detection_cycles(32, 32) == 32 * 32 + 32 and detection_cycles(128, 128) == 128 * 128 + 128,
     )
-    return {"coverage": table, "claims": c.items, "all_ok": c.all_ok}
+
+    # beyond-paper: p-parallel DPPU grouping (Section IV-D generalized) —
+    # reserving p scan groups cuts the sweep to ceil(Row*Col/p) + Col cycles
+    # and buys back the coverage lost at 128x128
+    group_table = {}
+    for p in (1, 4, 16, 64):
+        for net, layers in NETWORKS.items():
+            cov, tot = coverage(layers, 128, 128, dppu_groups=p)
+            group_table.setdefault(f"p={p}", {})[net] = f"{cov}/{tot}"
+    group_cycles = {p: detection_cycles(128, 128, dppu_groups=p) for p in (1, 4, 16, 64)}
+
+    def _covered(cell):
+        return int(cell.split("/")[0])
+
+    c.check(
+        "coverage at 128x128 is non-decreasing in the DPPU scan-group count",
+        all(
+            _covered(group_table[f"p={a}"][net]) <= _covered(group_table[f"p={b}"][net])
+            for a, b in zip((1, 4, 16), (4, 16, 64)) for net in NETWORKS
+        ),
+        str(group_table),
+    )
+    c.check(
+        "p-parallel scan cycles are ceil(Row*Col/p) + Col",
+        group_cycles[1] == 128 * 128 + 128
+        and group_cycles[16] == 128 * 128 // 16 + 128
+        and all(group_cycles[a] > group_cycles[b] for a, b in zip((1, 4, 16), (4, 16, 64))),
+        str(group_cycles),
+    )
+    c.check(
+        "full coverage at 128x128 for every network with 64 scan groups",
+        all(
+            group_table["p=64"][net].split("/")[0] == group_table["p=64"][net].split("/")[1]
+            for net in NETWORKS
+        ),
+        str(group_table["p=64"]),
+    )
+    return {
+        "coverage": table,
+        "coverage_128_by_groups": group_table,
+        "cycles_128_by_groups": group_cycles,
+        "claims": c.items,
+        "all_ok": c.all_ok,
+    }

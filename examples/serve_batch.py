@@ -28,8 +28,9 @@ def main():
 
     lm = get_smoke_config(args.arch)
     rng = np.random.default_rng(args.seed)
-    # a 4×4 array so one full scan sweep is 16 steps — the mid-flight fault
-    # below gets confirmed (2 probe hits) while the trace is still running
+    # a 4×4 array: the batched scan probes one grid row (4 PEs) per step, so
+    # a full sweep is 4 steps — the mid-flight fault below gets confirmed
+    # (2 probe hits across sweeps) while the trace is still running
     cfg = ServerConfig(arch=args.arch, n_slots=3, smax=48, mode=args.mode,
                        rows=4, cols=4, dppu_size=2, seed=args.seed, bist=False)
     server = FaultTolerantServer(cfg)

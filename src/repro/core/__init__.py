@@ -11,6 +11,8 @@ Layers:
   * engine        — HyCAEngine: fault-tolerant matmul for LM layers
   * ftcontext     — FTContext: the unified fault-aware execution layer the
                     model stack dispatches every weight matmul through
+  * scan          — ScanEngine: the batched, jit-compiled DPPU scan pipeline
+                    (detection → FPT merge as one compiled program)
 """
 from repro.core.engine import (
     FaultState,
@@ -23,8 +25,13 @@ from repro.core.engine import (
 )
 from repro.core.ftcontext import FTContext, ProtectPolicy, build_ftcontext, site_matmul
 from repro.core.redundancy import DPPUConfig, SCHEMES, repair
+from repro.core.scan import ScanConfig, ScanEngine, ScanState, build_scan_engine
 
 __all__ = [
+    "ScanConfig",
+    "ScanEngine",
+    "ScanState",
+    "build_scan_engine",
     "FaultState",
     "HyCAConfig",
     "FTContext",

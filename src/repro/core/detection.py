@@ -1,9 +1,17 @@
-"""Runtime fault detection with a reserved DPPU group (paper Section IV-D).
+"""Runtime fault detection with reserved DPPU groups (paper Section IV-D).
 
 One DPPU group of S lanes re-executes an S-MAC slice of one scanned PE per
 cycle and checks ``AR == BAR + PR`` against the checking-list buffer (CLB).
-Scanning the whole array takes ``Row·Col + Col`` cycles — independent of S —
-and a layer is "covered" iff that scan fits inside the layer's compute time.
+With ``p`` DPPU groups reserved for scanning, ``p`` PEs are probed in
+parallel, so a whole-array sweep takes ``⌈Row·Col/p⌉ + Col`` cycles — the
+Section IV-D formula generalized to p-parallel grouping (p=1 recovers the
+paper's ``Row·Col + Col``).  A layer is "covered" iff that scan fits inside
+the layer's compute time.
+
+The analytical model here is the contract the runtime engine honours:
+:meth:`repro.core.scan.ScanConfig.scan_cycles` reports exactly
+``detection_cycles(rows, cols, dppu_groups=block_rows*cols)``, so Table I /
+Fig. 15 and the ScanEngine agree by construction.
 """
 from __future__ import annotations
 
@@ -14,30 +22,43 @@ import numpy as np
 from repro.core.array_sim import ConvLayer, layer_cycles
 
 
-def detection_cycles(rows: int, cols: int) -> int:
-    """Row·Col + Col (Section IV-D): one PE scanned per cycle plus the final
-    Col-cycle comparison drain."""
-    return rows * cols + cols
+def detection_cycles(rows: int, cols: int, *, dppu_groups: int = 1) -> int:
+    """⌈Row·Col/p⌉ + Col (Section IV-D, p-parallel): ``dppu_groups`` PEs
+    scanned per cycle plus the final Col-cycle comparison drain.  The
+    default p=1 is the paper's single reserved group (Row·Col + Col)."""
+    if dppu_groups < 1:
+        raise ValueError(f"dppu_groups must be >= 1, got {dppu_groups}")
+    return -(-rows * cols // dppu_groups) + cols
 
 
-def clb_bytes(cols: int, acc_bytes: int = 4) -> int:
-    """CLB = 4·W·Col bytes: Ping-Pong × (BAR, AR) × Col entries of W-byte
-    accumulators (Section IV-D)."""
-    return 4 * acc_bytes * cols
+def clb_bytes(cols: int, acc_bytes: int = 4, *, dppu_groups: int = 1) -> int:
+    """CLB = 4·W·Col bytes *per scanning group*: Ping-Pong × (BAR, AR) × Col
+    entries of W-byte accumulators (Section IV-D).  Each of the ``p``
+    parallel groups owns a private ping-pong pair region, so faster scans
+    buy their latency with proportionally more CLB SRAM."""
+    if dppu_groups < 1:
+        raise ValueError(f"dppu_groups must be >= 1, got {dppu_groups}")
+    return 4 * acc_bytes * cols * dppu_groups
 
 
-def layer_covered(layer: ConvLayer, rows: int, cols: int) -> bool:
-    return detection_cycles(rows, cols) <= layer_cycles(layer, rows, cols)
+def layer_covered(layer: ConvLayer, rows: int, cols: int, *, dppu_groups: int = 1) -> bool:
+    return detection_cycles(rows, cols, dppu_groups=dppu_groups) <= layer_cycles(
+        layer, rows, cols
+    )
 
 
-def coverage(layers: list[ConvLayer], rows: int, cols: int) -> tuple[int, int]:
+def coverage(
+    layers: list[ConvLayer], rows: int, cols: int, *, dppu_groups: int = 1
+) -> tuple[int, int]:
     """(#layers whose execution fully covers one whole-array scan, #layers)."""
-    covered = sum(layer_covered(l, rows, cols) for l in layers)
+    covered = sum(
+        layer_covered(l, rows, cols, dppu_groups=dppu_groups) for l in layers
+    )
     return covered, len(layers)
 
 
 # --------------------------------------------------------------------------- #
-# Functional scan model: detect faulty PEs by AR == BAR + PR comparison.
+# Functional scan model — a thin adapter over the batched ScanEngine.
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass
 class ScanResult:
@@ -52,20 +73,44 @@ def scan_array(
     *,
     s_lanes: int = 8,
     fault_visibility: float = 1.0,
+    block_rows: int | None = None,
 ) -> ScanResult:
-    """Simulate one full scan.
+    """Simulate one full scan through the batched ScanEngine.
 
-    For each PE we model the S-MAC window check: a healthy PE always passes;
-    a faulty PE is flagged iff the fault corrupts the checked partial result
-    (probability ``fault_visibility`` per window — stuck-at faults in the
-    accumulator datapath corrupt "most of the computation", Section IV-D, so
-    the default is 1.0; lower values model marginal faults needing re-scan).
+    For each PE we model the S-MAC window check: a faulty PE corrupts the
+    checked partial result with probability ``fault_visibility`` per window
+    (stuck-at faults in the accumulator datapath corrupt "most of the
+    computation", Section IV-D, so the default is 1.0; lower values model
+    marginal faults needing re-scan).  The visible faults are handed to the
+    engine as high-bit stuck-at signatures; its complementary probe pair
+    then detects exactly the visible set — one jitted sweep, not a
+    rows·cols Python loop.
     """
+    import jax.numpy as jnp
+
+    from repro.core.engine import empty_fault_state
+    from repro.core.scan import build_scan_engine, probe_operands, scan_sweep
+
     rows, cols = fault_map.shape
     visible = rng.random((rows, cols)) < fault_visibility
-    detected = fault_map & visible
+    effective = fault_map & visible
+    engine = build_scan_engine(
+        rows, cols, window=s_lanes, block_rows=block_rows or rows, confirm_hits=1
+    )
+    # the shared probe recipe bounds |acc| well below 2^30, so the bit-30
+    # stuck-at-1 signatures below are exposed by one of the complementary
+    # pair on every PE — the engine detects the visible set exactly
+    px_np, pw_np = probe_operands(rows, cols, 0, s_lanes)
+    px, pw = jnp.asarray(px_np), jnp.asarray(pw_np)
+    state, _ = scan_sweep(
+        engine, engine.init_state(), empty_fault_state(1),
+        jnp.asarray(effective), jnp.full((rows, cols), 30, jnp.int32),
+        jnp.ones((rows, cols), jnp.int32), px, pw,
+    )
+    detected = np.asarray(engine.confirmed(state))
     fn = int((fault_map & ~detected).sum())
-    return ScanResult(detected=detected, false_positives=0, false_negatives=fn)
+    fp = int((detected & ~fault_map).sum())
+    return ScanResult(detected=detected, false_positives=fp, false_negatives=fn)
 
 
 def scans_to_full_detection(

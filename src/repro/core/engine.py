@@ -77,6 +77,70 @@ class FaultState:
     def max_faults(self) -> int:
         return self.fpt.shape[0]
 
+    def merge(
+        self,
+        detected: jax.Array,
+        *,
+        stuck_bit: jax.Array | None = None,
+        stuck_val: jax.Array | None = None,
+    ) -> "FaultState":
+        """Batched on-device FPT merge (the ScanEngine detection→repair path).
+
+        ``detected``: dense (rows, cols) bool grid of newly detected PEs;
+        ``stuck_bit``/``stuck_val``: optional (rows, cols) signature grids for
+        the new entries (default 0 — runtime scans observe *that* a PE is
+        faulty, not which accumulator bit is stuck).
+
+        Fully jittable with a static output shape (``max_faults`` entries):
+        swapping in different detection masks never retraces.  Semantics:
+
+          * **dedup** — a PE already in the FPT is never appended twice (the
+            dense-grid union makes double-detection structurally impossible,
+            fixing the host-side ``append_fault`` duplicate-entry bug that
+            silently burned DPPU repair capacity);
+          * existing entries keep their stuck signatures; new entries take
+            the supplied grids;
+          * the result is leftmost-first sorted (col-major, then row) — the
+            Section IV-B repair priority — with -1 padding;
+          * overflow beyond ``max_faults`` keeps the leftmost (repairable)
+            entries and DROPS the rest — the table cannot grow inside a
+            compiled program (static shapes; the host-side ``append_fault``
+            grows instead).  Dropped entries are invisible to
+            ``surviving_columns``, so callers that rely on column-prefix
+            degradation must size ``max_faults`` above DPPU capacity
+            (the FaultManager uses rows·cols, which can never truncate).
+        """
+        rows, cols = detected.shape
+        bit0, val0, faulty0 = _pe_grids(self, rows, cols)
+        new = detected & ~faulty0
+        faulty = faulty0 | detected
+        zero = jnp.zeros((rows, cols), jnp.int32)
+        bit = jnp.where(new, zero if stuck_bit is None else stuck_bit, bit0)
+        val = jnp.where(new, zero if stuck_val is None else stuck_val, val0)
+        # pack: leftmost-first (col, then row) over the flattened grid
+        ci = jnp.arange(cols)[None, :] + jnp.zeros((rows, 1), jnp.int32)
+        ri = jnp.arange(rows)[:, None] + jnp.zeros((1, cols), jnp.int32)
+        sentinel = jnp.int32(rows * cols)
+        key = jnp.where(faulty, ci * rows + ri, sentinel).ravel()
+        order = jnp.argsort(key)
+        taken = key[order] < sentinel
+        if self.max_faults <= rows * cols:
+            order, taken = order[: self.max_faults], taken[: self.max_faults]
+        else:
+            # the FPT has more slots than the grid has PEs: pad (argsort can
+            # only yield rows*cols indices; slicing would silently SHRINK the
+            # table and change the pytree leaf shapes mid-pipeline)
+            pad = self.max_faults - rows * cols
+            order = jnp.concatenate([order, jnp.zeros(pad, order.dtype)])
+            taken = jnp.concatenate([taken, jnp.zeros(pad, bool)])
+        r = jnp.where(taken, order // cols, -1).astype(jnp.int32)
+        c = jnp.where(taken, order % cols, -1).astype(jnp.int32)
+        return FaultState(
+            jnp.stack([r, c], axis=1),
+            jnp.where(taken, bit.ravel()[order], 0).astype(jnp.int32),
+            jnp.where(taken, val.ravel()[order], 0).astype(jnp.int32),
+        )
+
 
 def validate_fault_state(state: FaultState, rows: int, cols: int) -> FaultState:
     """Host-side FPT bounds check against the (rows, cols) array geometry.
@@ -165,16 +229,21 @@ def _corrupt(out: jax.Array, pe_bit: jax.Array, pe_val: jax.Array, pe_faulty: ja
 
 
 def _pe_grids(state: FaultState, rows: int, cols: int) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Scatter the FPT into dense (rows, cols) bit/val/faulty grids."""
+    """Scatter the FPT into dense (rows, cols) bit/val/faulty grids.
+
+    Padding entries are routed out of bounds and dropped by the scatter —
+    mapping them to (0, 0) with the grid's old value would race a *real*
+    fault at PE(0, 0): duplicate-index scatter order is undefined, and the
+    padding's stale write could clobber the fault."""
     bit = jnp.zeros((rows, cols), jnp.int32)
     val = jnp.zeros((rows, cols), jnp.int32)
     faulty = jnp.zeros((rows, cols), bool)
     valid = state.fpt[:, 0] >= 0
-    r = jnp.where(valid, state.fpt[:, 0], 0)
-    c = jnp.where(valid, state.fpt[:, 1], 0)
-    bit = bit.at[r, c].set(jnp.where(valid, state.stuck_bit, bit[r, c]))
-    val = val.at[r, c].set(jnp.where(valid, state.stuck_val, val[r, c]))
-    faulty = faulty.at[r, c].set(jnp.where(valid, True, faulty[r, c]))
+    r = jnp.where(valid, state.fpt[:, 0], rows)
+    c = jnp.where(valid, state.fpt[:, 1], cols)
+    bit = bit.at[r, c].set(state.stuck_bit, mode="drop")
+    val = val.at[r, c].set(state.stuck_val, mode="drop")
+    faulty = faulty.at[r, c].set(True, mode="drop")
     return bit, val, faulty
 
 
@@ -186,9 +255,10 @@ def repaired_grid(state: FaultState, rows: int, cols: int, n_repair: int) -> jax
     if k == 0:
         return repaired
     valid = state.fpt[:k, 0] >= 0
-    r = jnp.where(valid, state.fpt[:k, 0], 0)
-    c = jnp.where(valid, state.fpt[:k, 1], 0)
-    return repaired.at[r, c].set(valid)
+    # padding routed out of bounds (dropped): see _pe_grids
+    r = jnp.where(valid, state.fpt[:k, 0], rows)
+    c = jnp.where(valid, state.fpt[:k, 1], cols)
+    return repaired.at[r, c].set(True, mode="drop")
 
 
 # inline=True: when traced inside an outer jit/scan the protected matmul

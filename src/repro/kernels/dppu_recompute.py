@@ -83,6 +83,94 @@ def dppu_recompute(
     )(trow, tcol, x, w)
 
 
+# --------------------------------------------------------------------------- #
+# DPPU scan probe: batched AR == BAR + PR check (paper Section IV-D)
+# --------------------------------------------------------------------------- #
+def probe_check_ref(
+    px: jax.Array, pw: jax.Array, ar: jax.Array, *, window: int
+) -> jax.Array:
+    """Reference AR == BAR + PR mismatch check over a row-block of PEs.
+
+    ``px``: (block, K) probe activations, ``pw``: (K, cols) probe weights,
+    ``ar``: (block, cols) accumulator results read back from the (possibly
+    faulty) array.  The DPPU lanes recompute the partial result PR over the
+    first ``window`` MACs and the before-window accumulation BAR over the
+    rest; a PE is flagged iff AR != BAR + PR.  int32-exact (the paper's
+    datapath) — returns a (block, cols) bool mismatch mask.
+    """
+    w = min(window, px.shape[-1])
+    pr = jnp.matmul(
+        px[..., :w].astype(jnp.int32), pw[:w].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    bar = jnp.matmul(
+        px[..., w:].astype(jnp.int32), pw[w:].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return ar.astype(jnp.int32) != pr + bar
+
+
+def _probe_kernel(px_ref, pw_ref, ar_ref, o_ref, acc_ref):
+    # Same lane structure as the recompute kernel: the K-grid accumulates in
+    # VMEM scratch (the first K-block is PR, the rest is BAR — the split is
+    # positional, the sum is what the comparator sees at drain).
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        px_ref[...].astype(jnp.float32),
+        pw_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(0) - 1)
+    def _drain():
+        o_ref[...] = (ar_ref[...] != acc_ref[...].astype(jnp.int32)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def probe_check(
+    px: jax.Array,
+    pw: jax.Array,
+    ar: jax.Array,
+    *,
+    bk: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pallas AR == BAR + PR scan probe: one fused pass over the row-block.
+
+    Grid = (K/bk,): each step accumulates one K-panel (the first panel is the
+    partial result PR, the remainder the before-window BAR) and the drain
+    step compares against the array's accumulator readback — the checking-
+    list-buffer comparator of Section IV-D.  f32 accumulation is exact for
+    the small-int probe operands (|acc| << 2^24).  Returns (block, cols)
+    int32 mismatch flags.
+    """
+    block, kdim = px.shape
+    _, cols = pw.shape
+    assert kdim % bk == 0, (kdim, bk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(kdim // bk,),
+        in_specs=[
+            pl.BlockSpec((block, bk), lambda k: (0, k)),
+            pl.BlockSpec((bk, cols), lambda k: (k, 0)),
+            pl.BlockSpec((block, cols), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, cols), lambda k: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((block, cols), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((block, cols), jnp.int32),
+        interpret=interpret,
+    )(px.astype(jnp.int32), pw.astype(jnp.int32), ar.astype(jnp.int32))
+
+
 def scatter_overwrite(
     corrupted: jax.Array, tiles: jax.Array, fpt: jax.Array, *, bm: int, bn: int
 ) -> jax.Array:

@@ -85,6 +85,12 @@ def main(argv=None):
     ap.add_argument("--protect-fraction", type=float, default=1.0)
     ap.add_argument("--dispatch", default="twopass", choices=["twopass", "fused"],
                     help="FTContext kernel dispatch for protected matmuls")
+    ap.add_argument("--scan-block", type=int, default=1,
+                    help="PE-grid rows probed per scan step (must divide --rows; "
+                         "p = scan_block*cols DPPU groups scan in parallel)")
+    ap.add_argument("--dppu-groups", type=int, default=0,
+                    help="report the Section IV-D cycle model at this grouping "
+                         "(0 = the grouping --scan-block implies)")
     ap.add_argument("--sla", type=int, default=0, help="deadline in steps (0 = none)")
     ap.add_argument("--max-steps", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
@@ -94,7 +100,7 @@ def main(argv=None):
         arch=args.arch, n_slots=args.slots, smax=args.prompt_len + args.gen + 2,
         mode=args.mode, rows=args.rows, cols=args.cols, dppu_size=args.dppu,
         protect_fraction=args.protect_fraction, dispatch=args.dispatch,
-        fault_rate=args.fault_rate, seed=args.seed,
+        scan_block=args.scan_block, fault_rate=args.fault_rate, seed=args.seed,
     )
     server = FaultTolerantServer(cfg)
     if args.faults:
@@ -116,9 +122,16 @@ def main(argv=None):
     t0 = time.perf_counter()
     summary = server.run(trace, max_steps=args.max_steps)
     dt = time.perf_counter() - t0
+    from repro.core.detection import detection_cycles
+
+    groups = args.dppu_groups or args.scan_block * args.cols
     print(f"[serve] arch={lm.name} mode={args.mode} slots={args.slots} "
           f"faults={server.injector.n_faults} confirmed={server.manager.n_confirmed} "
           f"surviving_cols={server.manager.surviving_cols}/{args.cols}")
+    print(f"[serve] scan: block={args.scan_block} rows/step "
+          f"({server.manager.steps_per_sweep} steps/sweep); cycle model "
+          f"p={groups}: {detection_cycles(args.rows, args.cols, dppu_groups=groups)} "
+          f"cycles/sweep (p=1: {detection_cycles(args.rows, args.cols)})")
     for k in ("steps", "tokens", "tokens_per_step", "goodput_tokens",
               "requests_completed", "requests_failed", "ttft_mean_steps",
               "queue_depth_mean", "scan_sweeps", "effective_slots_final"):

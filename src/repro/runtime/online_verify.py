@@ -1,20 +1,28 @@
 """Online fault detection — the paper's Section IV-D lifted to LM matmuls.
 
-The paper reserves one DPPU group to re-execute a sliding window of S MACs
-for one scanned PE per cycle and compares AR == BAR + PR via a small checking
-list buffer.  The TPU-tile analogue implemented here:
+The paper reserves DPPU groups to re-execute a sliding window of S MACs for
+the scanned PEs and compares AR == BAR + PR via a small checking list
+buffer.  The TPU-tile analogue, now a thin adapter over the unified
+:mod:`repro.core.scan` ScanEngine:
 
   * the protected matmul's output is tiled onto the virtual PE grid
     (engine.py mapping: out[i, j] -> PE(i % rows, j % cols));
-  * each training/serving step, the verifier re-computes ONE PE's output
-    tile with an independent dot product (the "reserved DPPU group") and
-    compares against the array's result — a partial-result check: only a
-    ``window``-long slice of the contraction is recomputed, exactly the
-    paper's AR = BAR + PR identity over a window of S MACs;
-  * the scan coordinate rotates row-major, so the whole virtual array is
-    swept every rows*cols steps (paper: Row·Col + Col cycles);
-  * detected PEs are appended to the FaultState's FPT — the repair pipeline
-    picks them up on the next step.
+  * each training/serving step, the verifier re-computes a row-block of PE
+    output elements with independent dot products (the reserved DPPU
+    groups) and compares against the array's result — a partial-result
+    check: only a ``window``-long slice of the contraction is recomputed,
+    exactly the paper's AR = BAR + PR identity over a window of S MACs
+    (:func:`repro.core.scan.output_block_check` does the batched math);
+  * the scan cursor rotates over the **occupied** tile grid — the
+    ``min(rows, M) × min(cols, N)`` sub-grid that actually owns output
+    elements — so small decode shapes never silently skip scan steps (the
+    old cursor swept the full grid and burned a step whenever the scanned
+    coordinate fell outside the output tile, leaving PEs beyond it
+    unverified forever);
+  * detected PEs are appended to the FaultState's FPT — host-side via
+    :func:`append_fault` (deduped), or batched on-device via
+    :meth:`repro.core.engine.FaultState.merge` inside jitted pipelines —
+    and the repair pipeline picks them up on the next step.
 
 Float caveat (DESIGN.md §2): the int8 datapath compares exactly; the bf16/f32
 path uses a relative tolerance since recomputation reassociates the sum.
@@ -24,10 +32,10 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import FaultState
+from repro.core.scan import output_block_check
 
 
 @dataclasses.dataclass
@@ -35,53 +43,96 @@ class OnlineVerifier:
     rows: int = 32
     cols: int = 32
     window: int = 8          # S — MACs recomputed per check (partial result)
+    block_rows: int = 1      # PE-grid rows verified per check_block call
     rtol: float = 1e-3
-    step: int = 0
+    step: int = 0            # total checks issued (telemetry)
+    # one cursor per occupied-grid shape: a single global counter taken
+    # modulo a shape-dependent grid size would alias (e.g. alternating
+    # (2, n) and (3, n) outputs would pin the (2, n) cursor to even
+    # residues and starve half that grid's PEs forever)
+    _cursors: dict = dataclasses.field(default_factory=dict)
 
-    def coord(self, step: int | None = None) -> tuple[int, int]:
+    def occupied(self, m: int | None = None, n: int | None = None) -> tuple[int, int]:
+        """The sub-grid of PEs that own at least one output element of an
+        (m, n) output tile — the grid the scan cursor rotates over."""
+        r = self.rows if m is None else min(self.rows, m)
+        c = self.cols if n is None else min(self.cols, n)
+        return max(r, 1), max(c, 1)
+
+    def coord(
+        self, step: int | None = None, *, m: int | None = None, n: int | None = None
+    ) -> tuple[int, int]:
         s = self.step if step is None else step
-        idx = s % (self.rows * self.cols)
-        return idx // self.cols, idx % self.cols
+        rows, cols = self.occupied(m, n)
+        idx = s % (rows * cols)
+        return idx // cols, idx % cols
+
+    def _advance(self, key: tuple) -> int:
+        """Take the next cursor position for this occupied-grid shape (and
+        check granularity) and advance it (also bumps the global counter)."""
+        s = self._cursors.get(key, 0)
+        self._cursors[key] = s + 1
+        self.step += 1
+        return s
 
     def check(self, x: jax.Array, w: jax.Array, out: jax.Array) -> tuple[bool, tuple[int, int]]:
         """Re-verify the output element owned by the scanned PE.
 
-        x: (M, K), w: (K, N), out: (M, N) as produced by the (possibly faulty)
-        array.  Uses the first output element mapped to PE(r, c); the partial
-        check recomputes MACs [0, window) and compares against the array's
-        result restricted to the same window (BAR + PR identity).
-        """
-        r, c = self.coord()
-        self.step += 1
+        x: (M, K), w: (K, N), out: (M, N) as produced by the (possibly
+        faulty) array.  The cursor rotates over the occupied tile grid, so
+        every step verifies a real output element (the partial check
+        recomputes MACs [0, window) and compares against the array's result
+        restricted to the same window — the BAR + PR identity)."""
         m, n = out.shape
-        if r >= m or c >= n:
-            return True, (r, c)
-        kwin = min(self.window, x.shape[1])
-        pr = jnp.dot(
-            x[r, :kwin].astype(jnp.float32), w[:kwin, c].astype(jnp.float32)
+        rows, cols = self.occupied(m, n)
+        idx = self._advance(("elem", rows, cols)) % (rows * cols)
+        r, c = idx // cols, idx % cols
+        # single-column slice: verifying one element must cost two O(K) dot
+        # products, not a whole-row recompute across all n output columns
+        bad = output_block_check(
+            x, w[:, c : c + 1], out[:, c : c + 1], row0=r, row1=r + 1,
+            n_cols=1, window=self.window, rtol=self.rtol,
+        )[0, 0]
+        return not bool(bad), (r, c)
+
+    def check_block(
+        self, x: jax.Array, w: jax.Array, out: jax.Array
+    ) -> tuple[bool, list[tuple[int, int]]]:
+        """Verify a whole row-block of the occupied grid in one vectorized
+        call (the engine's row-block batching applied to a live matmul
+        output).  Returns (all clean, flagged PE coordinates)."""
+        m, n = out.shape
+        rows, cols = self.occupied(m, n)
+        blocks = -(-rows // self.block_rows)
+        r0 = (self._advance(("block", rows, cols)) % blocks) * self.block_rows
+        r1 = min(r0 + self.block_rows, rows)
+        bad = output_block_check(
+            x, w, out, row0=r0, row1=r1, n_cols=cols,
+            window=self.window, rtol=self.rtol,
         )
-        # BAR + PR: the array's value minus the tail contribution
-        tail = jnp.dot(
-            x[r, kwin:].astype(jnp.float32), w[kwin:, c].astype(jnp.float32)
-        )
-        ar = out[r, c].astype(jnp.float32)
-        expect = pr + tail
-        if jnp.issubdtype(out.dtype, jnp.integer):
-            ok = bool(ar == expect)
-        else:
-            ok = bool(
-                jnp.abs(ar - expect) <= self.rtol * (1.0 + jnp.abs(expect))
-            )
-        return ok, (r, c)
+        flagged = [(r0 + int(i), int(j)) for i, j in zip(*np.nonzero(bad))]
+        return not flagged, flagged
 
     def scan_cycles(self) -> int:
-        """Paper Section IV-D: Row·Col + Col cycles for a full sweep."""
+        """Paper Section IV-D: Row·Col + Col cycles for a full sweep (one
+        reserved DPPU group; see ``detection_cycles(dppu_groups=p)`` for
+        the p-parallel model)."""
         return self.rows * self.cols + self.cols
 
 
 def append_fault(state: FaultState, row: int, col: int) -> FaultState:
-    """FPT update on detection (host-side; next step's repair consumes it)."""
+    """FPT update on detection (host-side; next step's repair consumes it).
+
+    Deduped: re-detecting a (row, col) already in the table returns the
+    state unchanged — a duplicate entry would silently burn DPPU repair
+    capacity (each FPT slot maps to a recompute lane).  The batched
+    on-device equivalent is :meth:`repro.core.engine.FaultState.merge`.
+    """
+    import jax.numpy as jnp
+
     fpt = np.asarray(state.fpt).copy()
+    if bool(((fpt[:, 0] == row) & (fpt[:, 1] == col)).any()):
+        return state
     free = np.nonzero(fpt[:, 0] < 0)[0]
     if free.size == 0:  # FPT full: grow (capacity exceeded -> degradation path)
         fpt = np.concatenate([fpt, [[row, col]]]).astype(np.int32)

@@ -8,22 +8,32 @@ Two actors, deliberately separated:
     software observes it: the :class:`~repro.core.engine.FaultState` that
     corrupts the protected matmul path, and corrupted *probe* computations.
   * :class:`FaultManager` — the *runtime*.  Never reads the truth directly.
-    It interleaves one :class:`~repro.runtime.online_verify.OnlineVerifier`
-    scan step per decode step, probing one PE per step against the corrupted
-    hardware output (the paper's reserved-DPPU-group AR = BAR + PR check),
-    and drives each PE through the lifecycle
+    It is a thin adapter over the unified
+    :class:`~repro.core.scan.ScanEngine`: one batched probe step per decode
+    step checks a whole row-block of the PE grid (``scan_block`` rows × all
+    columns — the paper's p DPPU groups probing p PEs in parallel) against
+    the complementary ±probe pair, and drives each PE through the lifecycle
 
         HEALTHY -> SUSPECT -> CONFIRMED -> REPAIRED | RETIRED
 
     A flagged PE becomes SUSPECT; ``confirm_hits`` total flags promote it to
-    CONFIRMED and append it to the engine FPT (``online_verify.append_fault``
-    keeps it leftmost-sorted).  Confirmed faults within DPPU capacity are
-    REPAIRED (recomputed every window); the leftmost-first overflow is
-    RETIRED — its column and everything right of it is disconnected from the
-    output buffers, so the array keeps computing *correct* results on the
-    surviving column prefix at proportionally lower throughput.  The manager
-    publishes that as ``capacity_fraction`` and the scheduler shrinks
-    admission accordingly.
+    CONFIRMED and merge it into the engine FPT — the batched, deduped,
+    on-device :meth:`~repro.core.engine.FaultState.merge` (leftmost-sorted;
+    the old host-side ``append_fault`` path could append the same PE twice
+    and silently burn repair capacity).  Confirmed faults within DPPU
+    capacity are REPAIRED (recomputed every window); the leftmost-first
+    overflow is RETIRED — its column and everything right of it is
+    disconnected from the output buffers, so the array keeps computing
+    *correct* results on the surviving column prefix at proportionally lower
+    throughput.  The manager publishes that as ``capacity_fraction`` and the
+    scheduler shrinks admission accordingly.
+
+    The power-on scan (:meth:`FaultManager.boot_scan`) is ONE jitted call:
+    ``jax.lax.scan`` over sweeps, each sweep a ``lax.scan`` over row-blocks
+    — where the legacy path paid ``sweeps·rows·cols`` Python iterations and
+    a host round-trip per probed PE.  ``boot_scan(batched=False)`` keeps the
+    per-PE reference loop (identical probes, identical fault set — asserted
+    in tests and benchmarks/scan_latency.py).
 
 Because confirmed faults are either repaired (DPPU recompute) or avoided
 (column remap), only *unconfirmed* faults corrupt served tokens — exactly the
@@ -34,14 +44,23 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import FaultState, HyCAConfig, fault_state_from_map, surviving_columns
-from repro.runtime.online_verify import OnlineVerifier, append_fault
+from repro.core.scan import (
+    ScanState,
+    boot_scan,
+    build_scan_engine,
+    probe_operands,
+    scan_probe_block,
+)
 
 HEALTHY, SUSPECT, CONFIRMED, REPAIRED, RETIRED = "healthy", "suspect", "confirmed", "repaired", "retired"
 _LIFECYCLE = (HEALTHY, SUSPECT, CONFIRMED, REPAIRED, RETIRED)
+
+_merge = jax.jit(lambda fs, det: fs.merge(det))
 
 
 # --------------------------------------------------------------------------- #
@@ -112,24 +131,36 @@ class FaultInjector:
                 vals[i] = self.stuck_val[r, c]
         return FaultState(jnp.asarray(fpt), jnp.asarray(bits), jnp.asarray(vals))
 
+    def truth_grids(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Dense (rows, cols) device grids of the truth — the hardware the
+        jitted scan pipeline probes (``scan.corrupt_probe`` is the
+        bit-identical device mirror of :meth:`corrupted_probe`)."""
+        return (
+            jnp.asarray(self.fault_map),
+            jnp.asarray(self.stuck_bit),
+            jnp.asarray(self.stuck_val),
+        )
+
     def probe_operands(self, sweep: int, window: int = 8) -> tuple[np.ndarray, np.ndarray]:
         """Deterministic small-int probe operands, fresh per sweep so faults
         whose stuck bit coincides with one probe's value are caught by the
-        next sweep (the paper's re-scan of marginal faults)."""
-        rng = np.random.default_rng((sweep + 1) * 7919)
-        px = rng.integers(-4, 8, size=(self.rows, window)).astype(np.int32)
-        pw = rng.integers(-4, 8, size=(window, self.cols)).astype(np.int32)
-        return px, pw
+        next sweep (the paper's re-scan of marginal faults).  One shared
+        recipe (:func:`repro.core.scan.probe_operands`) — the scan adapters
+        and benchmarks rely on its detectability bound."""
+        return probe_operands(self.rows, self.cols, sweep, window)
 
-    def corrupted_probe(self, px: np.ndarray, pw: np.ndarray) -> np.ndarray:
+    def corrupted_probe(self, px: np.ndarray, pw: np.ndarray, row0: int = 0) -> np.ndarray:
         """What the faulty array returns for the probe matmul: out[i, j] is
-        PE(i, j)'s accumulator with its stuck bit forced."""
+        PE(row0 + i, j)'s accumulator with its stuck bit forced.  ``px`` may
+        be a row-slice of the probe (the serving hot path corrupts only the
+        block being scanned); ``row0`` aligns it with the fault grids."""
+        sl = slice(row0, row0 + px.shape[0])
         out = (px.astype(np.int64) @ pw.astype(np.int64)).astype(np.int32)
-        mask = (np.int32(1) << self.stuck_bit).astype(np.int32)
+        mask = (np.int32(1) << self.stuck_bit[sl]).astype(np.int32)
         stuck_on = (out | mask).astype(np.int32)
         stuck_off = (out & ~mask).astype(np.int32)
-        bad = np.where(self.stuck_val > 0, stuck_on, stuck_off)
-        return np.where(self.fault_map, bad, out)
+        bad = np.where(self.stuck_val[sl] > 0, stuck_on, stuck_off)
+        return np.where(self.fault_map[sl], bad, out)
 
 
 # --------------------------------------------------------------------------- #
@@ -140,10 +171,12 @@ class FaultManagerConfig:
     confirm_hits: int = 2      # probe flags needed to promote SUSPECT -> CONFIRMED
     probe_window: int = 8      # S — MACs recomputed per check
     max_boot_sweeps: int = 4   # whole-array sweeps in the power-on scan
+    scan_block: int = 1        # PE-grid rows probed per scan step (p = scan_block·cols)
 
 
 class FaultManager:
-    """HEALTHY → SUSPECT → CONFIRMED → REPAIRED/RETIRED state machine."""
+    """HEALTHY → SUSPECT → CONFIRMED → REPAIRED/RETIRED state machine, driven
+    by the batched ScanEngine."""
 
     def __init__(self, hyca: HyCAConfig, injector: FaultInjector,
                  cfg: FaultManagerConfig | None = None):
@@ -151,9 +184,13 @@ class FaultManager:
         self.hyca = hyca
         self.injector = injector
         self.cfg = cfg or FaultManagerConfig()
-        self.verifier = OnlineVerifier(rows=hyca.rows, cols=hyca.cols, window=self.cfg.probe_window)
+        self.engine = build_scan_engine(
+            hyca.rows, hyca.cols,
+            window=self.cfg.probe_window, block_rows=self.cfg.scan_block,
+            confirm_hits=self.cfg.confirm_hits,
+        )
+        self.scan_state = self.engine.init_state()
         self.pe_state = np.full((hyca.rows, hyca.cols), HEALTHY, dtype=object)
-        self.hits = np.zeros((hyca.rows, hyca.cols), np.int32)
         n = hyca.rows * hyca.cols
         self.confirmed_state = FaultState(
             jnp.full((n, 2), -1, jnp.int32), jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32)
@@ -162,6 +199,19 @@ class FaultManager:
         self.repairs = 0
 
     # ------------------------------------------------------------------ #
+    @property
+    def hits(self) -> np.ndarray:
+        return np.asarray(self.scan_state.hits)
+
+    @property
+    def steps_per_sweep(self) -> int:
+        """Probe steps per whole-array sweep (rows / scan_block)."""
+        return self.engine.cfg.steps_per_sweep
+
+    def scan_cycles(self) -> int:
+        """Analytical sweep latency at this grouping: ⌈Row·Col/p⌉ + Col."""
+        return self.engine.cfg.scan_cycles()
+
     def confirmed_coords(self) -> frozenset[tuple[int, int]]:
         fpt = np.asarray(self.confirmed_state.fpt)
         return frozenset((int(r), int(c)) for r, c in fpt if r >= 0)
@@ -186,10 +236,6 @@ class FaultManager:
         return {s: int((self.pe_state == s).sum()) for s in _LIFECYCLE}
 
     # ------------------------------------------------------------------ #
-    def _confirm(self, r: int, c: int) -> None:
-        self.confirmed_state = append_fault(self.confirmed_state, r, c)
-        self._reassign_repair()
-
     def _reassign_repair(self) -> None:
         """Leftmost-first: the first ``capacity`` confirmed faults are DPPU-
         repaired; the overflow is retired with its column region."""
@@ -201,54 +247,99 @@ class FaultManager:
                 if new == REPAIRED:
                     self.repairs += 1
 
-    def scan_step(self) -> tuple[bool, tuple[int, int]]:
-        """One verifier probe (call once per decode step).  Returns
-        (check passed, scanned coordinate)."""
-        sweep = self.verifier.step // (self.hyca.rows * self.hyca.cols)
-        r, c = self.verifier.coord()
-        px, pw = self.injector.probe_operands(sweep, self.cfg.probe_window)
-        out = self.injector.corrupted_probe(px, pw)
-        ok, _ = self.verifier.check(px, pw, out)
-        if ok:
-            # complementary test vector (negated weights): flips the
-            # accumulator's sign, so a stuck-at in the high bits is visible
-            # whichever sign the first probe happened to produce (a stuck-at-1
-            # on bit 30 is a no-op on every small negative two's-complement
-            # accumulator).  Classic BIST pattern pairing.
-            out2 = self.injector.corrupted_probe(px, -pw)
-            expect2 = int(px[r].astype(np.int64) @ -pw[:, c].astype(np.int64))
-            ok = int(out2[r, c]) == expect2
-        self.scans += 1
-        if not ok and self.pe_state[r, c] in (HEALTHY, SUSPECT):
-            self.hits[r, c] += 1
-            if self.hits[r, c] >= self.cfg.confirm_hits:
-                self.pe_state[r, c] = CONFIRMED
-                self._confirm(r, c)
-            else:
-                self.pe_state[r, c] = SUSPECT
-        return ok, (r, c)
+    def _sync(self) -> None:
+        """Fold the engine's hit counters into lifecycle labels and merge the
+        confirmed set into the FPT (batched, deduped, on-device)."""
+        hits = np.asarray(self.scan_state.hits)
+        confirmed = hits >= self.cfg.confirm_hits
+        suspect = (hits >= 1) & ~confirmed
+        ps = self.pe_state
+        ps[suspect & (ps == HEALTHY)] = SUSPECT
+        known = (ps == CONFIRMED) | (ps == REPAIRED) | (ps == RETIRED)
+        newly = confirmed & ~known
+        if newly.any():
+            ps[newly] = CONFIRMED
+            self.confirmed_state = _merge(self.confirmed_state, jnp.asarray(confirmed))
+            self._reassign_repair()
 
-    def boot_scan(self) -> int:
-        """Power-on sweep: up to ``max_boot_sweeps`` whole-array scans, early-
-        exit once a full sweep confirms nothing new.  Returns #confirmed."""
-        n_pe = self.hyca.rows * self.hyca.cols
-        for _ in range(self.cfg.max_boot_sweeps):
-            before = self.n_confirmed
-            suspects_before = int((self.pe_state == SUSPECT).sum())
-            for _ in range(n_pe):
-                self.scan_step()
-            grew = self.n_confirmed > before or int((self.pe_state == SUSPECT).sum()) > suspects_before
-            if not grew:
-                break
+    def scan_step(self) -> tuple[bool, tuple[int, int]]:
+        """One batched probe step (call once per decode step): checks
+        ``scan_block`` grid rows × all columns against the complementary
+        ±probe pair in a single jitted call.  Returns (block all-clean,
+        (first row, one-past-last row) of the scanned block)."""
+        block = self.engine.cfg.block_rows
+        sweep = int(self.scan_state.sweep)
+        r0 = int(self.scan_state.cursor) * block
+        px, pw = self.injector.probe_operands(sweep, self.cfg.probe_window)
+        # only the scanned block's rows are materialized and corrupted
+        px_b = px[r0 : r0 + block]
+        ar_b = self.injector.corrupted_probe(px_b, pw, row0=r0)
+        arn_b = self.injector.corrupted_probe(px_b, -pw, row0=r0)
+        self.scan_state, flags, _ = scan_probe_block(
+            self.engine, self.scan_state,
+            jnp.asarray(px_b), jnp.asarray(pw), jnp.asarray(ar_b), jnp.asarray(arn_b),
+        )
+        self.scans += 1
+        self._sync()
+        return not bool(np.asarray(flags).any()), (r0, r0 + block)
+
+    def boot_scan(self, *, batched: bool = True) -> int:
+        """Power-on scan: ``max_boot_sweeps`` whole-array sweeps.
+
+        ``batched=True`` (default): ONE jitted call — ``lax.scan`` over the
+        pre-sampled probe schedule, detections merged into the FPT on-device,
+        zero per-PE host round-trips.  ``batched=False`` keeps the legacy
+        per-PE Python loop (identical probes → identical confirmed set; the
+        reference the batched path is tested against).  Returns #confirmed.
+        """
+        c = self.engine.cfg
+        sweep0 = int(self.scan_state.sweep)
+        n_sweeps = self.cfg.max_boot_sweeps
+        ops = [self.injector.probe_operands(sweep0 + s, self.cfg.probe_window)
+               for s in range(n_sweeps)]
+        if batched:
+            fmap, sbit, sval = self.injector.truth_grids()
+            px_stack = jnp.asarray(np.stack([px for px, _ in ops]))
+            pw_stack = jnp.asarray(np.stack([pw for _, pw in ops]))
+            self.scan_state, self.confirmed_state = boot_scan(
+                self.engine, self.scan_state, self.confirmed_state,
+                fmap, sbit, sval, px_stack, pw_stack,
+            )
+            self.scans += n_sweeps * c.steps_per_sweep
+        else:
+            hits = np.asarray(self.scan_state.hits).copy()
+            for s in range(n_sweeps):
+                px, pw = ops[s]
+                ar = self.injector.corrupted_probe(px, pw)
+                ar_neg = self.injector.corrupted_probe(px, -pw)
+                expect = (px.astype(np.int64) @ pw.astype(np.int64)).astype(np.int32)
+                expect_neg = (px.astype(np.int64) @ -pw.astype(np.int64)).astype(np.int32)
+                for r in range(c.rows):          # one PE per iteration — the
+                    for col in range(c.cols):    # pre-ScanEngine behaviour
+                        self.scans += 1
+                        bad = bool(ar[r, col] != expect[r, col]) or bool(
+                            ar_neg[r, col] != expect_neg[r, col]
+                        )
+                        if bad and hits[r, col] < c.confirm_hits:
+                            hits[r, col] += 1
+            self.scan_state = ScanState(
+                cursor=self.scan_state.cursor,
+                sweep=jnp.int32(sweep0 + n_sweeps),
+                hits=jnp.asarray(hits),
+            )
+        self._sync()
         return self.n_confirmed
 
     def bist(self) -> int:
         """Built-in self test: trust the factory fault map (the paper's
         repair path assumes a known FPT at power-on; runtime scanning exists
-        for faults that appear *after* that).  Confirms every current truth
-        fault directly."""
-        for r, c in self.injector.coords():
-            if self.pe_state[r, c] in (HEALTHY, SUSPECT):
-                self.pe_state[r, c] = CONFIRMED
-                self._confirm(r, c)
+        for faults that appear *after* that).  Seeds the engine's hit
+        counters at the confirmation threshold for every current truth fault
+        — the engine is the single source of detection state."""
+        hits = np.maximum(
+            np.asarray(self.scan_state.hits),
+            np.where(self.injector.fault_map, self.cfg.confirm_hits, 0),
+        ).astype(np.int32)
+        self.scan_state = dataclasses.replace(self.scan_state, hits=jnp.asarray(hits))
+        self._sync()
         return self.n_confirmed

@@ -38,8 +38,13 @@ class FleetConfig:
     max_new_tokens: int = 8
     retire_fraction: float = 0.25  # drain a replica at/below this capacity fraction
     seed: int = 0
+    # scan_block=2: the batched ScanEngine sweeps the default 8x8 array every
+    # 4 steps — background scanning is cheap enough (one jitted row-block
+    # probe per step) to leave on fleet-wide
     server: ServerConfig = dataclasses.field(
-        default_factory=lambda: ServerConfig(n_slots=2, smax=32, mode="protected")
+        default_factory=lambda: ServerConfig(
+            n_slots=2, smax=32, mode="protected", scan_block=2
+        )
     )
 
 
@@ -137,6 +142,11 @@ def run_fleet(cfg: FleetConfig) -> dict:
         "replacements": replacements,
         "requests_lost": requests_lost,
         "spares_remaining": pool.remaining,
+        "scan_steps_total": sum(r.server.manager.scans for r in replicas),
+        "scan_steps_per_sweep": replicas[0].server.manager.steps_per_sweep
+        if replicas else 0,
+        "detection_cycles_model": replicas[0].server.manager.scan_cycles()
+        if replicas else 0,
         "replica_summaries": [
             {
                 "region": r.region,

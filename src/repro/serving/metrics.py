@@ -32,9 +32,14 @@ class StepRecord:
 
 
 class ServingMetrics:
-    def __init__(self, n_slots: int, rows: int, cols: int):
+    def __init__(self, n_slots: int, rows: int, cols: int,
+                 steps_per_sweep: int | None = None):
         self.n_slots = n_slots
         self.rows, self.cols = rows, cols
+        # probe steps per whole-array sweep: rows/scan_block with the batched
+        # ScanEngine (the server passes it); the legacy one-PE-per-step
+        # default is rows*cols
+        self.steps_per_sweep = steps_per_sweep or rows * cols
         self.steps: list[StepRecord] = []
         self.completions: list[CompletedRequest] = []
         self._t0 = time.perf_counter()
@@ -82,7 +87,7 @@ class ServingMetrics:
         ttft = self.ttft_steps()
         scans = [r for r in self.steps if r.scan_ok is not None]
         n_pe_scans = len(scans)
-        sweep = max(self.rows * self.cols, 1)
+        sweep = max(self.steps_per_sweep, 1)
         ok = [c for c in self.completions if c.ok]
         return {
             "steps": n_steps,

@@ -4,7 +4,10 @@ The step loop wires the scheduler and fault manager around one jitted decode:
 
     every step:
       1. hardware wearout      — the injector may grow the fault map;
-      2. one scan step         — the fault manager probes one PE (IV-D);
+      2. one scan step         — the fault manager probes one row-block of
+                                 PEs (``scan_block`` rows × all columns, the
+                                 batched ScanEngine — IV-D with p parallel
+                                 DPPU groups);
       3. capacity update       — confirmed faults beyond DPPU capacity shrink
                                  the surviving column prefix, and with it the
                                  number of decode slots admission may fill;
@@ -65,6 +68,7 @@ class ServerConfig:
     dppu_size: int = 4             # DPPU capacity ~= repairable faults
     protect_fraction: float = 1.0  # fraction of main-stack layers on the array
     dispatch: str = "twopass"      # twopass | fused (FTContext kernel dispatch)
+    scan_block: int = 1            # PE-grid rows probed per scan step (ScanEngine)
     confirm_hits: int = 2
     bist: bool = True              # power-on: confirm the factory fault map
     boot_scan: bool = False        # probe-based power-on sweep instead
@@ -141,11 +145,14 @@ class FaultTolerantServer:
         self.injector = injector or FaultInjector(cfg.rows, cfg.cols, seed=cfg.seed + 1)
         self.manager = FaultManager(
             self.bundle.hyca, self.injector,
-            FaultManagerConfig(confirm_hits=cfg.confirm_hits),
+            FaultManagerConfig(confirm_hits=cfg.confirm_hits, scan_block=cfg.scan_block),
         )
         self.queue = RequestQueue()
         self.scheduler = ContinuousBatchingScheduler(cfg.n_slots, cfg.smax)
-        self.metrics = ServingMetrics(cfg.n_slots, cfg.rows, cfg.cols)
+        self.metrics = ServingMetrics(
+            cfg.n_slots, cfg.rows, cfg.cols,
+            steps_per_sweep=self.manager.steps_per_sweep,
+        )
         self.step_idx = 0
         self._next_rid = 0
         self._fstate_key: tuple[int, int] | None = None
@@ -209,7 +216,7 @@ class FaultTolerantServer:
         if cfg.mode != "off" and cfg.fault_rate > 0:
             self.injector.step(cfg.fault_rate)
 
-        # 2. one online-verifier scan step per decode step
+        # 2. one batched row-block scan step per decode step
         scan_ok: bool | None = None
         if cfg.mode == "protected":
             scan_ok, _ = self.manager.scan_step()

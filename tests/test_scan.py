@@ -1,0 +1,400 @@
+"""ScanEngine acceptance tests — the unified batched DPPU scan pipeline.
+
+  * batched boot scan confirms the EXACT same fault set as the legacy
+    per-PE Python loop on seeded fault maps — in one jitted call per sweep
+    (trace-counted: no per-PE host round-trips, no retrace across fault
+    maps);
+  * FPT merges from detections trigger zero recompilations (the
+    test_ftcontext no-retrace pattern applied to FaultState.merge);
+  * FaultState.merge dedup / leftmost-first order / overflow truncation;
+  * the complementary negated-weights probe pairing catches stuck bits the
+    positive probe cannot see;
+  * FaultManager lifecycle: SUSPECT -> CONFIRMED with confirm_hits > 1;
+  * the engine's achieved sweep latency equals the analytical
+    detection_cycles(rows, cols, dppu_groups=p) model;
+  * the Pallas probe kernel (interpret mode) matches the jnp reference.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.detection import detection_cycles
+from repro.core.engine import FaultState, HyCAConfig, empty_fault_state, hyca_matmul
+from repro.core.redundancy import DPPUConfig
+from repro.core.scan import (
+    ScanConfig,
+    build_scan_engine,
+    corrupt_probe,
+    scan_probe_step,
+    scan_sweep,
+)
+from repro.kernels.dppu_recompute import probe_check, probe_check_ref
+from repro.runtime.online_verify import OnlineVerifier, append_fault
+from repro.serving.fault_manager import (
+    CONFIRMED,
+    REPAIRED,
+    SUSPECT,
+    FaultInjector,
+    FaultManager,
+    FaultManagerConfig,
+)
+
+
+def _managers(rows, cols, coords, *, scan_block=1, confirm_hits=2, dppu=8, seed=0):
+    """Two identical manager+injector pairs (for batched-vs-legacy runs)."""
+    out = []
+    for _ in range(2):
+        inj = FaultInjector(rows, cols, seed=seed)
+        for r, c in coords:
+            inj.inject_at(r, c)
+        hyca = HyCAConfig(rows=rows, cols=cols, dppu=DPPUConfig(size=dppu, group_size=min(8, dppu)))
+        out.append(FaultManager(hyca, inj, FaultManagerConfig(
+            confirm_hits=confirm_hits, scan_block=scan_block,
+        )))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: batched boot scan == legacy per-PE loop, one jitted call/sweep
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("scan_block", [1, 2, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batched_boot_scan_matches_legacy_fault_set(seed, scan_block):
+    rng = np.random.default_rng(seed)
+    coords = {(int(rng.integers(0, 8)), int(rng.integers(0, 8))) for _ in range(6)}
+    batched, legacy = _managers(8, 8, coords, scan_block=scan_block, seed=seed)
+    n_b = batched.boot_scan(batched=True)
+    n_l = legacy.boot_scan(batched=False)
+    assert n_b == n_l == len(coords)
+    assert batched.confirmed_coords() == legacy.confirmed_coords() == frozenset(coords)
+    # identical per-PE hit counters, identical FPT ordering
+    np.testing.assert_array_equal(batched.hits, legacy.hits)
+    np.testing.assert_array_equal(
+        np.asarray(batched.confirmed_state.fpt), np.asarray(legacy.confirmed_state.fpt)
+    )
+
+
+def test_sweep_is_one_compiled_call_across_fault_maps():
+    """The jitted sweep retraces once, then serves every fault map / probe /
+    state value — detection is mode-as-data, like FTContext."""
+    engine = build_scan_engine(8, 8, block_rows=2, confirm_hits=1)
+    traces = []
+
+    @jax.jit
+    def sweep(state, fstate, fmap, sbit, sval, px, pw):
+        traces.append(1)
+        return engine.sweep(state, fstate, fmap, sbit, sval, px, pw)
+
+    prng = np.random.default_rng(0)
+    px = jnp.asarray(prng.integers(-4, 8, (8, 8)), jnp.int32)
+    pw = jnp.asarray(prng.integers(-4, 8, (8, 8)), jnp.int32)
+    sbit = jnp.full((8, 8), 30, jnp.int32)
+    sval = jnp.ones((8, 8), jnp.int32)
+    for i in range(3):  # three different fault maps through one program
+        fmap = np.zeros((8, 8), bool)
+        fmap[i, 2 * i] = True
+        state, fstate = sweep(
+            engine.init_state(), empty_fault_state(64),
+            jnp.asarray(fmap), sbit, sval, px, pw,
+        )
+        assert np.array_equal(np.asarray(engine.confirmed(state)), fmap)
+        assert (int(fstate.fpt[0, 0]), int(fstate.fpt[0, 1])) == (i, 2 * i)
+    assert len(traces) == 1  # no retrace, no per-PE host round-trips
+
+
+def test_fpt_merge_from_detections_zero_recompilations():
+    """Acceptance: detection -> FPT merge inside one compiled program, zero
+    recompilations on new detections (the test_ftcontext pattern)."""
+    traces = []
+
+    @jax.jit
+    def merge(fs, detected):
+        traces.append(1)
+        return fs.merge(detected)
+
+    fs = empty_fault_state(16)
+    for i in range(4):
+        det = np.zeros((4, 4), bool)
+        det[i, (2 * i) % 4] = True
+        fs = merge(fs, jnp.asarray(det))
+    assert len(traces) == 1
+    got = {tuple(rc) for rc in np.asarray(fs.fpt).tolist() if rc[0] >= 0}
+    assert got == {(0, 0), (1, 2), (2, 0), (3, 2)}
+
+
+# --------------------------------------------------------------------------- #
+# FaultState.merge semantics
+# --------------------------------------------------------------------------- #
+def test_merge_dedupes_and_sorts_leftmost_first():
+    fs = empty_fault_state(8)
+    det = np.zeros((4, 4), bool)
+    det[3, 1] = det[0, 2] = det[2, 1] = True
+    m = fs.merge(jnp.asarray(det))
+    rows = [tuple(rc) for rc in np.asarray(m.fpt).tolist() if rc[0] >= 0]
+    assert rows == [(2, 1), (3, 1), (0, 2)]  # col-major, then row
+    # re-detecting the same PEs appends nothing (the append_fault bug)
+    m2 = m.merge(jnp.asarray(det))
+    np.testing.assert_array_equal(np.asarray(m.fpt), np.asarray(m2.fpt))
+
+
+def test_merge_preserves_existing_signatures_and_truncates_leftmost():
+    fs = FaultState(
+        jnp.asarray([[1, 0], [-1, -1]], jnp.int32),
+        jnp.asarray([30, 0], jnp.int32),
+        jnp.asarray([1, 0], jnp.int32),
+    )
+    det = np.zeros((4, 4), bool)
+    det[1, 0] = True   # duplicate of the existing entry
+    det[0, 3] = True   # new
+    det[2, 2] = True   # new — but the 2-entry FPT is full after (1,0),(2,2)
+    m = fs.merge(jnp.asarray(det))
+    fpt = np.asarray(m.fpt).tolist()
+    assert fpt == [[1, 0], [2, 2]]  # leftmost two kept, (0,3) truncated
+    # the pre-existing entry kept its stuck signature through the merge
+    assert int(m.stuck_bit[0]) == 30 and int(m.stuck_val[0]) == 1
+
+
+def test_merge_preserves_slot_count_above_grid_size():
+    """Regression: an FPT with more slots than the grid has PEs must keep its
+    shape through merge (argsort yields rows*cols indices; slicing them would
+    silently shrink the table and break lax.scan carry structure)."""
+    fs = empty_fault_state(6)  # 6 slots, 2x2 grid
+    det = np.zeros((2, 2), bool)
+    det[1, 0] = True
+    m = fs.merge(jnp.asarray(det))
+    assert m.max_faults == 6
+    assert m.fpt.shape == (6, 2) and m.stuck_bit.shape == (6,)
+    rows = [tuple(rc) for rc in np.asarray(m.fpt).tolist() if rc[0] >= 0]
+    assert rows == [(1, 0)]
+    # and it keeps composing: a second merge on the padded result
+    m2 = m.merge(jnp.asarray(np.eye(2, dtype=bool)))
+    assert m2.max_faults == 6
+    got = {tuple(rc) for rc in np.asarray(m2.fpt).tolist() if rc[0] >= 0}
+    assert got == {(0, 0), (1, 0), (1, 1)}
+
+
+def test_fault_at_origin_survives_fpt_padding(rng):
+    """Regression: padding entries used to scatter their *stale* grid value
+    onto PE(0, 0); with undefined duplicate-scatter ordering, a real fault at
+    the origin could be silently erased from the dense grids (and from every
+    merge result).  Padding must be dropped, not aliased to (0, 0)."""
+    fs = empty_fault_state(16)
+    det = np.zeros((4, 4), bool)
+    det[0, 0] = True
+    m = fs.merge(jnp.asarray(det))
+    m = m.merge(jnp.asarray(np.zeros((4, 4), bool)))  # second merge: padding present
+    rows = [tuple(rc) for rc in np.asarray(m.fpt).tolist() if rc[0] >= 0]
+    assert rows == [(0, 0)]
+    # and the engine path: an origin fault with a padded FPT still corrupts
+    # small values: |out| < 2 keeps f32 exponent bit 30 clear, so the
+    # stuck-at-1 is guaranteed visible
+    x = jnp.asarray(rng.standard_normal((4, 8)) * 0.05, jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    st = FaultState(
+        jnp.asarray([[0, 0], [-1, -1], [-1, -1]], jnp.int32),
+        jnp.asarray([30, 0, 0], jnp.int32), jnp.asarray([1, 0, 0], jnp.int32),
+    )
+    cfg = HyCAConfig(rows=4, cols=4, mode="unprotected")
+    bad = hyca_matmul(x, w, st, cfg=cfg)
+    ref = jnp.matmul(x, w)
+    assert not np.array_equal(np.asarray(bad), np.asarray(ref))
+    assert np.array_equal(np.asarray(bad)[1:], np.asarray(ref)[1:])  # only row 0 PEs
+
+
+def test_append_fault_dedupes():
+    state = FaultState(
+        jnp.full((4, 2), -1, jnp.int32), jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32)
+    )
+    s1 = append_fault(state, 3, 7)
+    s2 = append_fault(s1, 3, 7)  # duplicate detection: must be a no-op
+    np.testing.assert_array_equal(np.asarray(s1.fpt), np.asarray(s2.fpt))
+    assert int((np.asarray(s2.fpt)[:, 0] >= 0).sum()) == 1
+    s3 = append_fault(s2, 1, 2)
+    rows = [tuple(r) for r in np.asarray(s3.fpt).tolist() if r[0] >= 0]
+    assert rows == [(1, 2), (3, 7)]
+
+
+# --------------------------------------------------------------------------- #
+# complementary probe pairing
+# --------------------------------------------------------------------------- #
+def test_negated_probe_catches_sign_blind_stuck_bit():
+    """A stuck-at-1 on bit 30 is a no-op on a small negative two's-complement
+    accumulator — the positive probe passes, the negated one must not."""
+    px = jnp.asarray([[-1]], jnp.int32)   # 1x1 array, K=1: accumulator = -1
+    pw = jnp.asarray([[1]], jnp.int32)
+    fmap = jnp.ones((1, 1), bool)
+    sbit = jnp.full((1, 1), 30, jnp.int32)
+    sval = jnp.ones((1, 1), jnp.int32)
+    clean = px @ pw
+    ar = corrupt_probe(clean, fmap, sbit, sval)
+    assert int(ar[0, 0]) == -1  # bit 30 already set on -1: corruption invisible
+    assert not bool(probe_check_ref(px, pw, ar, window=1).any())
+    # the pair: negated weights flip the accumulator positive
+    clean_neg = px @ (-pw)
+    ar_neg = corrupt_probe(clean_neg, fmap, sbit, sval)
+    assert bool(probe_check_ref(px, -pw, ar_neg, window=1).any())
+    # ...and the engine's paired probe step flags the PE
+    engine = build_scan_engine(1, 1, window=1, confirm_hits=1)
+    state, flags, row0 = scan_probe_step(
+        engine, engine.init_state(), px, pw, ar, ar_neg
+    )
+    assert bool(np.asarray(flags).any()) and int(row0) == 0
+    assert bool(np.asarray(engine.confirmed(state))[0, 0])
+
+
+def test_manager_confirms_via_negated_probe_pairing():
+    """End-to-end: a bit-31 stuck-at-1 fault (sign flips with the probe's
+    sign) is confirmed through the manager's paired scan."""
+    (mgr,) = _managers(4, 4, [(2, 3)], confirm_hits=2)[:1]
+    mgr.injector.stuck_bit[2, 3] = 31
+    mgr.injector.stuck_val[2, 3] = 1
+    assert mgr.boot_scan() == 1
+    assert mgr.confirmed_coords() == {(2, 3)}
+
+
+# --------------------------------------------------------------------------- #
+# lifecycle: SUSPECT -> CONFIRMED under confirm_hits > 1
+# --------------------------------------------------------------------------- #
+def test_suspect_to_confirmed_needs_confirm_hits():
+    (mgr,) = _managers(4, 4, [(1, 2)], confirm_hits=3, dppu=2)[:1]
+    mgr.injector.stuck_bit[1, 2] = 30
+    mgr.injector.stuck_val[1, 2] = 1
+    seen = []
+    for _ in range(3 * mgr.steps_per_sweep):
+        mgr.scan_step()
+        seen.append(str(mgr.pe_state[1, 2]))
+    # two full sweeps flag it twice -> still SUSPECT; the third confirms
+    assert seen.count(SUSPECT) >= 2
+    assert mgr.pe_state[1, 2] == REPAIRED
+    assert int(mgr.hits[1, 2]) == 3
+    assert seen.index(SUSPECT) < seen.index(REPAIRED)
+    assert CONFIRMED not in seen  # confirm+repair assignment is atomic per step
+
+
+def test_scan_step_probes_row_blocks():
+    (mgr,) = _managers(8, 8, [], scan_block=4)[:1]
+    assert mgr.steps_per_sweep == 2
+    ok, (r0, r1) = mgr.scan_step()
+    assert ok and (r0, r1) == (0, 4)
+    ok, (r0, r1) = mgr.scan_step()
+    assert ok and (r0, r1) == (4, 8)
+    assert int(mgr.scan_state.sweep) == 1  # one full sweep in two steps
+
+
+# --------------------------------------------------------------------------- #
+# cycle model: the engine achieves what detection_cycles promises
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("rows,cols,block", [(32, 32, 1), (32, 32, 4), (16, 8, 16), (8, 8, 2)])
+def test_engine_cycles_agree_with_analytical_model(rows, cols, block):
+    engine = build_scan_engine(rows, cols, block_rows=block)
+    p = engine.cfg.dppu_groups
+    assert p == block * cols
+    assert engine.cfg.scan_cycles() == detection_cycles(rows, cols, dppu_groups=p)
+    assert engine.cfg.scan_cycles() == engine.cfg.steps_per_sweep + cols
+    # p=1 recovers the paper's Row*Col + Col
+    assert detection_cycles(rows, cols) == rows * cols + cols
+
+
+def test_scan_config_validation():
+    with pytest.raises(ValueError, match="divide"):
+        ScanConfig(rows=8, cols=8, block_rows=3)
+    with pytest.raises(ValueError, match="block_rows"):
+        ScanConfig(rows=8, cols=8, block_rows=9)
+    with pytest.raises(ValueError, match="confirm_hits"):
+        ScanConfig(confirm_hits=0)
+    with pytest.raises(ValueError, match="dppu_groups"):
+        detection_cycles(8, 8, dppu_groups=0)
+
+
+# --------------------------------------------------------------------------- #
+# Pallas probe kernel == jnp reference (interpret mode on CPU)
+# --------------------------------------------------------------------------- #
+def test_probe_kernel_interpret_matches_reference():
+    rng = np.random.default_rng(11)
+    px = jnp.asarray(rng.integers(-4, 8, (8, 16)), jnp.int32)
+    pw = jnp.asarray(rng.integers(-4, 8, (16, 8)), jnp.int32)
+    fmap = jnp.asarray(rng.random((8, 8)) < 0.3)
+    ar = corrupt_probe(
+        px @ pw, fmap, jnp.full((8, 8), 30, jnp.int32), jnp.ones((8, 8), jnp.int32)
+    )
+    ref = probe_check_ref(px, pw, ar, window=8)
+    kern = probe_check(px, pw, ar, bk=8, interpret=True).astype(bool)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(ref))
+
+
+def test_engine_interpret_backend_matches_jnp():
+    fmap = np.zeros((4, 4), bool)
+    fmap[1, 3] = fmap[3, 0] = True
+    results = {}
+    for backend in ("jnp", "interpret"):
+        engine = build_scan_engine(4, 4, block_rows=2, confirm_hits=1, backend=backend)
+        inj = FaultInjector(4, 4, seed=0)
+        inj.inject_map(fmap)
+        inj.stuck_bit[fmap] = 30
+        inj.stuck_val[fmap] = 1
+        px, pw = inj.probe_operands(0)
+        state, _ = scan_sweep(
+            engine, engine.init_state(), empty_fault_state(16),
+            *inj.truth_grids(), jnp.asarray(px), jnp.asarray(pw),
+        )
+        results[backend] = np.asarray(engine.confirmed(state))
+    np.testing.assert_array_equal(results["jnp"], results["interpret"])
+    np.testing.assert_array_equal(results["jnp"], fmap)
+
+
+# --------------------------------------------------------------------------- #
+# OnlineVerifier: occupied-grid rotation (the skipped-PE fix)
+# --------------------------------------------------------------------------- #
+def test_verifier_rotates_over_occupied_tile_grid(rng):
+    """Small decode output (2 x 8) on an 8x8 grid: only 16 PEs own output
+    elements.  The old cursor swept all 64 coordinates and silently burned
+    48 steps per sweep; now every check verifies a real element and a fault
+    in the occupied region is found within rows_eff*cols_eff steps."""
+    x = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    state = FaultState(
+        jnp.asarray([[1, 5]], jnp.int32), jnp.asarray([30], jnp.int32),
+        jnp.asarray([1], jnp.int32),
+    )
+    out = hyca_matmul(x, w, state, cfg=HyCAConfig(rows=8, cols=8, mode="unprotected"))
+    v = OnlineVerifier(rows=8, cols=8)
+    coords, flagged = [], []
+    for _ in range(2 * 8):  # exactly one occupied-grid sweep
+        ok, rc = v.check(x, w, out)
+        coords.append(rc)
+        if not ok:
+            flagged.append(rc)
+    assert set(coords) == {(r, c) for r in range(2) for c in range(8)}
+    assert flagged == [(1, 5)]
+
+
+def test_verifier_check_block_flags_whole_rows(rng):
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    # fault sites where |clean| < 1.5: the f32 bit pattern has exponent
+    # bit 30 clear, so a stuck-at-1 there is guaranteed visible
+    clean = np.asarray(jnp.matmul(x, w))
+    sites = [(r, c) for r in range(4) for c in range(8) if abs(clean[r, c]) < 1.5]
+    (r1, c1), (r2, c2) = next(
+        (a, b) for a in sites for b in sites if a[1] < b[1]
+    )
+    state = FaultState(
+        jnp.asarray([[r1, c1], [r2, c2]], jnp.int32),
+        jnp.asarray([30, 30], jnp.int32), jnp.asarray([1, 1], jnp.int32),
+    )
+    out = hyca_matmul(x, w, state, cfg=HyCAConfig(rows=8, cols=8, mode="unprotected"))
+    v = OnlineVerifier(rows=8, cols=8, block_rows=4)
+    ok1, flagged1 = v.check_block(x, w, out)   # rows 0..3: both faults live here
+    ok2, flagged2 = v.check_block(x, w, out)   # rows 4..7: clean
+    assert not ok1 and sorted(flagged1) == sorted([(r1, c1), (r2, c2)])
+    assert ok2 and flagged2 == []
+
+
+def test_verifier_full_grid_unchanged():
+    v = OnlineVerifier(rows=4, cols=4)
+    seen = {v.coord(s) for s in range(16)}
+    assert len(seen) == 16
+    assert v.scan_cycles() == 4 * 4 + 4
