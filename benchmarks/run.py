@@ -19,6 +19,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        campaign,
         cluster_ffp,
         fig02_accuracy_vs_per,
         ft_overhead,
@@ -36,6 +37,7 @@ def main(argv=None) -> int:
     )
 
     modules = {
+        "campaign": campaign.run,
         "fig02_accuracy_vs_per": fig02_accuracy_vs_per.run,
         "fig03_motivation_ffp": fig03_motivation_ffp.run,
         "fig09_area": fig09_area.run,

@@ -13,7 +13,18 @@ Layers:
                     model stack dispatches every weight matmul through
   * scan          — ScanEngine: the batched, jit-compiled DPPU scan pipeline
                     (detection → FPT merge as one compiled program)
+  * campaign      — FaultCampaign: vmapped Monte-Carlo fault-injection engine
+                    (batched fault maps + repair outcomes + accuracy sweeps
+                    in one jitted program, with binomial CIs)
 """
+from repro.core.campaign import (
+    CampaignResult,
+    CampaignRun,
+    CampaignSpec,
+    ChaosSpec,
+    batched_fault_states,
+    run_campaign,
+)
 from repro.core.engine import (
     FaultState,
     HyCAConfig,
@@ -28,6 +39,12 @@ from repro.core.redundancy import DPPUConfig, SCHEMES, repair
 from repro.core.scan import ScanConfig, ScanEngine, ScanState, build_scan_engine
 
 __all__ = [
+    "CampaignResult",
+    "CampaignRun",
+    "CampaignSpec",
+    "ChaosSpec",
+    "batched_fault_states",
+    "run_campaign",
     "ScanConfig",
     "ScanEngine",
     "ScanState",

@@ -1,0 +1,632 @@
+"""FaultCampaign — vmapped Monte-Carlo fault-injection engine (paper Sec. V).
+
+The paper's evidence is statistical: FFP and remaining-computing-power curves
+over thousands of sampled fault configurations (Figs. 3, 10, 11, 14), and
+accuracy-vs-PER collapse over sampled fault maps (Fig. 2).  The legacy
+``reliability.evaluate_scheme`` walks those configurations one at a time in a
+Python loop; this module turns a whole campaign into ONE jitted program:
+
+  * fault maps are sampled as a batch — either with the NumPy reference
+    streams (bit-identical to the legacy loop, the ``boot_scan(batched=False)``
+    idiom) or on device with JAX PRNG (the fast path for large campaigns);
+  * repair outcomes for all four schemes (RR / CR / DR / HyCA) are evaluated
+    ``vmap``-over-configs inside a single compiled program — including DR's
+    bipartite fault↔spare matching, reformulated as an incremental union-find
+    feasibility scan (see :func:`_dr_eval_one`);
+  * batched :class:`~repro.core.engine.FaultState` tables (leading config
+    axis) drive protected / unprotected forward passes through
+    ``vmap(hyca_matmul)`` so accuracy campaigns (Fig. 2) stop re-tracing or
+    re-entering Python per fault configuration;
+  * summaries carry binomial confidence intervals, which double as the
+    tolerance source for the repo's golden-stats acceptance tests
+    (tests/test_campaign.py) — a regression anywhere in the fault-handling
+    stack fails CI with a statistical witness instead of a flaky point
+    estimate.
+
+Seed plumbing is explicit and shared-by-construction: one
+:class:`CampaignPoint` holds the fault maps every scheme is evaluated on,
+fixing the latent ``reliability.sweep`` inconsistency where per-scheme seed
+derivation went through the salted builtin ``hash`` (maps were shared across
+schemes only when PYTHONHASHSEED happened to cooperate).
+
+DR feasibility reformulation (why the union-find scan is exact): a fault at
+(r, c) can be repaired by diagonal spare r or spare c — an edge {r, c} in a
+multigraph whose vertices are the *working* spares (a fault next to a dead
+spare degenerates to a self-loop on the surviving endpoint).  A fault set is
+fully matchable iff every connected component has #edges ≤ #vertices (each
+component then carries at most one cycle and can be oriented so every edge
+gets a private vertex — the transversal-matroid/bicircular independence
+criterion).  The legacy greedy processes faults in column order and drops a
+fault iff it cannot augment, i.e. iff its prefix just became infeasible — so
+the first infeasible prefix is exactly the legacy first unmatched fault, and
+its column bounds the surviving prefix.  Since a feasible prefix has at most
+``n_spares`` edges, scanning the first ``n_spares + 1`` column-ordered faults
+decides both outcomes — a static bound that makes the whole thing one
+``lax.scan``.  Parity with ``redundancy.dr_repair`` is asserted bit-exactly in
+tests/test_campaign.py across schemes, fault models, and array shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fault_models as fm
+from repro.core import redundancy as red
+from repro.core.engine import FaultState, empty_fault_state
+from repro.core.reliability import point_seed  # shared seed derivation (re-export)
+
+__all__ = [
+    "CampaignSpec",
+    "CampaignPoint",
+    "CampaignResult",
+    "CampaignRun",
+    "ChaosSpec",
+    "batched_fault_states",
+    "binomial_halfwidth",
+    "chaos_maps",
+    "device_clustered_maps",
+    "device_dppu_capacity",
+    "device_random_maps",
+    "evaluate_batched",
+    "evaluate_point",
+    "evaluate_reference",
+    "mean_halfwidth",
+    "point_seed",
+    "run_campaign",
+    "sample_point",
+    "summarize_accuracy",
+]
+
+
+# --------------------------------------------------------------------------- #
+# statistics
+# --------------------------------------------------------------------------- #
+Z95 = 1.959963984540054  # two-sided 95% normal quantile
+
+
+def binomial_halfwidth(p_hat: float, n: int, *, z: float = Z95) -> float:
+    """Wald binomial CI half-width for an empirical proportion, floored at
+    z/(2n) so a degenerate 0/1 estimate still reports the resolution limit
+    of the sample size (docs/campaign.md derives the tolerance use)."""
+    if n <= 0:
+        return 1.0
+    w = z * math.sqrt(max(p_hat * (1.0 - p_hat), 0.0) / n)
+    return max(w, z / (2.0 * n))
+
+
+def mean_halfwidth(samples: np.ndarray, *, z: float = Z95) -> float:
+    """Normal-approximation CI half-width for the mean of bounded samples."""
+    s = np.asarray(samples, np.float64)
+    if s.size <= 1:
+        return 1.0
+    return float(z * s.std(ddof=1) / math.sqrt(s.size))
+
+
+def summarize_accuracy(acc: np.ndarray) -> dict:
+    """Per-config accuracy vector -> mean ± CI and campaign quantiles."""
+    a = np.asarray(acc, np.float64)
+    return {
+        "mean": float(a.mean()),
+        "ci95": mean_halfwidth(a),
+        "q10": float(np.quantile(a, 0.10)),
+        "q50": float(np.quantile(a, 0.50)),
+        "q90": float(np.quantile(a, 0.90)),
+        "min": float(a.min()),
+        "max": float(a.max()),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# campaign specification + sampling (shared-by-construction)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    rows: int = 32
+    cols: int = 32
+    fault_model: str = "random"          # random | clustered
+    n_configs: int = 2000
+    schemes: tuple[str, ...] = red.SCHEMES
+    dppu: red.DPPUConfig | None = None   # HyCA DPPU (default: size=cols)
+    seed: int = 0
+    sampler: str = "numpy"               # numpy (legacy-aligned) | device
+
+    def dppu_cfg(self) -> red.DPPUConfig:
+        return self.dppu or red.DPPUConfig(size=self.cols)
+
+
+@dataclasses.dataclass
+class CampaignPoint:
+    """One PER operating point: the fault maps shared by EVERY scheme plus the
+    per-scheme auxiliary draws (spare health / DPPU lane capacity)."""
+
+    per: float
+    maps: np.ndarray                     # (n, rows, cols) bool
+    spare_faulty: dict[str, np.ndarray]  # scheme -> (n, n_spares) bool
+    hyca_caps: np.ndarray | None         # (n,) int, None if HyCA not in play
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignResult:
+    scheme: str
+    per: float
+    fault_model: str
+    n_configs: int
+    fully_functional_prob: float
+    ffp_ci95: float
+    remaining_power: float
+    remaining_power_ci95: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CampaignRun:
+    spec: CampaignSpec
+    results: list[CampaignResult]
+    python_iterations: int  # host-loop trips (legacy: schemes*pers*n_configs)
+
+    def table(self) -> dict[str, dict[float, float]]:
+        out: dict[str, dict[float, float]] = {}
+        for r in self.results:
+            out.setdefault(r.scheme, {})[r.per] = r.fully_functional_prob
+        return out
+
+    def get(self, scheme: str, per: float) -> CampaignResult:
+        for r in self.results:
+            if r.scheme == scheme and r.per == per:
+                return r
+        raise KeyError((scheme, per))
+
+
+def _numpy_point(spec: CampaignSpec, per: float, seed: int) -> CampaignPoint:
+    """Legacy-aligned NumPy sampling: replay the exact ``evaluate_scheme``
+    stream (fresh ``default_rng(seed)``, maps first, then the scheme's
+    auxiliary draws) — so campaign results are bit-identical to the
+    per-config loop at the same seed, and the maps are identical across
+    schemes *by construction of the stream*, not by accident.  The maps are
+    sampled ONCE; each scheme's aux stream restarts from a snapshot of the
+    post-maps RNG state (identical to a per-scheme replay, without paying
+    the clustered model's Python placement loop once per scheme)."""
+    rng = np.random.default_rng(seed)
+    maps = fm.sample_fault_maps(
+        rng, spec.n_configs, spec.rows, spec.cols, per, spec.fault_model  # type: ignore[arg-type]
+    )
+    state_after_maps = rng.bit_generator.state
+    spare: dict[str, np.ndarray] = {}
+    caps: np.ndarray | None = None
+    for scheme in spec.schemes:
+        g = np.random.default_rng(seed)
+        g.bit_generator.state = state_after_maps
+        if scheme == "HyCA":
+            cfg = spec.dppu_cfg()
+            lane = red.dppu_capacity(g, cfg, per, spec.n_configs)
+            caps = np.minimum(lane, red.effective_capacity(cfg, spec.cols))
+        else:
+            n_sp = red.n_spares(scheme, spec.rows, spec.cols)
+            spare[scheme] = g.random((spec.n_configs, n_sp)) < per
+    return CampaignPoint(per=per, maps=maps, spare_faulty=spare, hyca_caps=caps)
+
+
+def _device_point(spec: CampaignSpec, per: float, seed: int) -> CampaignPoint:
+    """On-device sampling: one PRNG key per point, folded per role — maps are
+    drawn once and shared across schemes by construction."""
+    key = jax.random.key(seed)
+    kmaps, kaux = jax.random.split(key)
+    if spec.fault_model == "random":
+        maps = device_random_maps(kmaps, spec.n_configs, spec.rows, spec.cols, per)
+    elif spec.fault_model == "clustered":
+        maps = device_clustered_maps(kmaps, spec.n_configs, spec.rows, spec.cols, per)
+    else:
+        raise ValueError(f"unknown fault model {spec.fault_model!r}")
+    spare: dict[str, np.ndarray] = {}
+    caps: np.ndarray | None = None
+    for i, scheme in enumerate(spec.schemes):
+        ks = jax.random.fold_in(kaux, i)
+        if scheme == "HyCA":
+            cfg = spec.dppu_cfg()
+            lane = device_dppu_capacity(ks, cfg, per, spec.n_configs)
+            caps = np.minimum(
+                np.asarray(lane), red.effective_capacity(cfg, spec.cols)
+            )
+        else:
+            n_sp = red.n_spares(scheme, spec.rows, spec.cols)
+            spare[scheme] = np.asarray(
+                jax.random.bernoulli(ks, per, (spec.n_configs, n_sp))
+            )
+    return CampaignPoint(
+        per=per, maps=np.asarray(maps), spare_faulty=spare, hyca_caps=caps
+    )
+
+
+def sample_point(spec: CampaignSpec, per: float, *, seed: int | None = None) -> CampaignPoint:
+    """Sample one operating point's fault maps + per-scheme auxiliaries."""
+    s = spec.seed if seed is None else seed
+    if spec.sampler == "numpy":
+        return _numpy_point(spec, per, s)
+    if spec.sampler == "device":
+        return _device_point(spec, per, s)
+    raise ValueError(f"unknown sampler {spec.sampler!r}")
+
+
+# --------------------------------------------------------------------------- #
+# device samplers (the fast path for large campaigns)
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("n", "rows", "cols"))
+def device_random_maps(key, n: int, rows: int, cols: int, per) -> jax.Array:
+    """(n, rows, cols) i.i.d. Bernoulli(per) fault maps, sampled on device."""
+    return jax.random.bernoulli(key, per, (n, rows, cols))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "rows", "cols", "max_clusters", "max_satellites"),
+)
+def device_clustered_maps(
+    key,
+    n: int,
+    rows: int,
+    cols: int,
+    per,
+    cluster_size_mean: float = 4.0,
+    cluster_sigma: float = 1.5,
+    *,
+    max_clusters: int = 64,
+    max_satellites: int = 16,
+) -> jax.Array:
+    """Device Meyer–Pradhan-style clustered maps (fm.clustered_fault_maps'
+    semantics with static loop bounds): the per-map fault COUNT is exact
+    Binomial(rows*cols, per) — the property that makes HyCA's FFP
+    distribution-insensitive — while placement is cluster-wise (geometric
+    cluster sizes, Gaussian satellite offsets, clipped in-bounds), topped up
+    with exact uniform-without-replacement fills."""
+    size_p = 1.0 / max(cluster_size_mean, 1.0)
+
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        target = jax.random.bernoulli(k1, per, (rows * cols,)).sum().astype(jnp.int32)
+
+        def body(i, carry):
+            m, placed = carry
+            kk = jax.random.fold_in(k2, i)
+            ka, kb, kc, kd = jax.random.split(kk, 4)
+            cr = jax.random.uniform(ka, (), minval=0.0, maxval=float(rows))
+            cc = jax.random.uniform(kb, (), minval=0.0, maxval=float(cols))
+            u = jax.random.uniform(kc, ())
+            g = jnp.floor(jnp.log1p(-u) / jnp.log1p(-size_p)).astype(jnp.int32) + 1
+            size = jnp.minimum(jnp.minimum(g, max_satellites), target - placed)
+            off = jax.random.normal(kd, (2, max_satellites)) * cluster_sigma
+            rr = jnp.clip(jnp.round(cr + off[0]), 0, rows - 1).astype(jnp.int32)
+            cc2 = jnp.clip(jnp.round(cc + off[1]), 0, cols - 1).astype(jnp.int32)
+            sel = jnp.arange(max_satellites) < size
+            m = m.at[rr, cc2].max(sel)
+            return m, m.sum().astype(jnp.int32)
+
+        m, placed = jax.lax.fori_loop(
+            0, max_clusters, body, (jnp.zeros((rows, cols), bool), jnp.int32(0))
+        )
+        # exact top-up: uniform without replacement over the healthy cells
+        pri = jax.random.uniform(k3, (rows * cols,))
+        pri = jnp.where(m.ravel(), jnp.inf, pri)
+        rank = jnp.argsort(jnp.argsort(pri))
+        fill = rank < (target - m.sum().astype(jnp.int32))
+        del placed
+        return m | fill.reshape(rows, cols)
+
+    return jax.vmap(one)(jax.random.split(key, n))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n"))
+def device_dppu_capacity(key, cfg: red.DPPUConfig, per, n: int) -> jax.Array:
+    """Device mirror of :func:`repro.core.redundancy.dppu_capacity`: a
+    redundancy subgroup survives iff at most one member is faulty; an
+    unhealthy group contributes zero lanes."""
+    mult_sub = -(-cfg.group_size // cfg.mult_red_group)
+    add_units = max(cfg.group_size - 1, 1)
+    add_sub = -(-add_units // cfg.adder_red_group)
+    km, ka = jax.random.split(key)
+    m_faults = jax.random.bernoulli(
+        km, per, (n, cfg.n_groups, mult_sub, cfg.mult_red_group + 1)
+    )
+    a_faults = jax.random.bernoulli(
+        ka, per, (n, cfg.n_groups, add_sub, cfg.adder_red_group + 1)
+    )
+    m_ok = (m_faults.sum(-1) <= 1).all(-1)
+    a_ok = (a_faults.sum(-1) <= 1).all(-1)
+    return ((m_ok & a_ok).sum(-1) * cfg.group_size).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# batched scheme evaluation (the vmapped core)
+# --------------------------------------------------------------------------- #
+def _rr_eval_one(fault_map: jax.Array, spare_faulty: jax.Array, *, cols: int):
+    per_row = fault_map.sum(axis=1)
+    repaired_rows = (per_row == 1) & ~spare_faulty
+    ff = ((per_row == 0) | repaired_rows).all()
+    unrepaired = fault_map & ~repaired_rows[:, None]
+    first = jnp.argmax(unrepaired.any(axis=0)).astype(jnp.int32)
+    return ff, jnp.where(ff, cols, first)
+
+
+def _cr_eval_one(fault_map: jax.Array, spare_faulty: jax.Array, *, cols: int):
+    per_col = fault_map.sum(axis=0)
+    repairable = (per_col == 0) | ((per_col == 1) & ~spare_faulty)
+    ff = repairable.all()
+    first = jnp.argmax(~repairable).astype(jnp.int32)
+    return ff, jnp.where(ff, cols, first)
+
+
+def _hyca_eval_one(fault_map: jax.Array, capacity: jax.Array, *, cols: int):
+    counts = fault_map.sum(axis=0).astype(jnp.int32)
+    ff = counts.sum() <= capacity
+    csum = jnp.cumsum(counts)
+    # first column whose cumulative fault count exceeds capacity — the
+    # (capacity)-th leftmost fault's column (Section IV-B repair priority)
+    first = jnp.argmax(csum >= capacity + 1).astype(jnp.int32)
+    return ff, jnp.where(ff, cols, first)
+
+
+def _ordered_sub_faults(sub: jax.Array, k: int):
+    """First ``k`` faults of a sub-array in leftmost-first (col, then row)
+    order — the exact processing order of the legacy greedy matcher."""
+    nr, nc = sub.shape
+    r = jnp.arange(nr, dtype=jnp.int32)[:, None]
+    c = jnp.arange(nc, dtype=jnp.int32)[None, :]
+    sentinel = jnp.int32(nr * nc)
+    key = jnp.where(sub, c * nr + r, sentinel).ravel()  # flat idx is row-major
+    order = jnp.argsort(key)[:k]
+    valid = key[order] < sentinel
+    fr = jnp.where(valid, (order // nc).astype(jnp.int32), 0)
+    fc = jnp.where(valid, (order % nc).astype(jnp.int32), 0)
+    return fr, fc, valid
+
+
+def _dr_sub_feasibility(fr, fc, valid, spare_ok, *, n_spares: int, cols: int,
+                        col_offset: int):
+    """Incremental union-find feasibility over column-ordered faults of one
+    square(ish) sub-array.  Returns (infeasible, first_bad_global_col)."""
+    find_iters = int(math.ceil(math.log2(max(n_spares, 2)))) + 2
+
+    def find(parent, v):
+        return jax.lax.fori_loop(0, find_iters, lambda _, u: parent[u], v)
+
+    def step(carry, xs):
+        parent, size, verts, edges, bad, bad_col = carry
+        r, c, ok = xs
+        r_ok = spare_ok[r]
+        c_ok = spare_ok[c]
+        usable = r_ok | c_ok
+        a = jnp.where(r_ok, r, c)   # surviving endpoint(s): both usable ->
+        b = jnp.where(c_ok, c, r)   # edge {r, c}; one usable -> self-loop
+        ra = find(parent, a)
+        rb = find(parent, b)
+        swap = size[rb] > size[ra]
+        hi = jnp.where(swap, rb, ra)
+        lo = jnp.where(swap, ra, rb)
+        do_union = ok & usable & (ra != rb)
+        parent = jnp.where(do_union, parent.at[lo].set(hi), parent)
+        size = jnp.where(do_union, size.at[hi].add(size[lo]), size)
+        verts = jnp.where(do_union, verts.at[hi].add(verts[lo]), verts)
+        edges = jnp.where(do_union, edges.at[hi].add(edges[lo]), edges)
+        root = jnp.where(do_union, hi, ra)
+        add_edge = ok & usable
+        edges = jnp.where(add_edge, edges.at[root].add(1), edges)
+        over = edges[root] > verts[root]  # component carries >1 cycle
+        newly_bad = ok & (~usable | (add_edge & over))
+        first = newly_bad & ~bad
+        bad_col = jnp.where(first, jnp.int32(col_offset) + c, bad_col)
+        return (parent, size, verts, edges, bad | newly_bad, bad_col), None
+
+    init = (
+        jnp.arange(n_spares, dtype=jnp.int32),
+        jnp.ones(n_spares, jnp.int32),
+        spare_ok.astype(jnp.int32),
+        jnp.zeros(n_spares, jnp.int32),
+        jnp.zeros((), bool),
+        jnp.int32(cols),
+    )
+    (_, _, _, _, bad, bad_col), _ = jax.lax.scan(step, init, (fr, fc, valid))
+    return bad, bad_col
+
+
+def _dr_eval_one(fault_map: jax.Array, spare_faulty: jax.Array, *, rows: int,
+                 cols: int):
+    n = min(rows, cols)
+    n_sub = -(-max(rows, cols) // n)
+    bad_any = jnp.zeros((), bool)
+    first_col = jnp.int32(cols)
+    for s in range(n_sub):
+        if rows >= cols:
+            sub = fault_map[s * n : (s + 1) * n, :]
+            col_offset = 0
+        else:
+            sub = fault_map[:, s * n : (s + 1) * n]
+            col_offset = s * n
+        spare_ok = ~spare_faulty[s * n : (s + 1) * n]
+        k = min(n + 1, sub.shape[0] * sub.shape[1])
+        fr, fc, valid = _ordered_sub_faults(sub, k)
+        bad, bad_col = _dr_sub_feasibility(
+            fr, fc, valid, spare_ok, n_spares=n, cols=cols, col_offset=col_offset
+        )
+        bad_any = bad_any | bad
+        first_col = jnp.minimum(first_col, jnp.where(bad, bad_col, cols))
+    return ~bad_any, jnp.where(bad_any, first_col, cols)
+
+
+def _eval_one(scheme: str, rows: int, cols: int) -> Callable:
+    if scheme == "RR":
+        return functools.partial(_rr_eval_one, cols=cols)
+    if scheme == "CR":
+        return functools.partial(_cr_eval_one, cols=cols)
+    if scheme == "DR":
+        return functools.partial(_dr_eval_one, rows=rows, cols=cols)
+    if scheme == "HyCA":
+        return functools.partial(_hyca_eval_one, cols=cols)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def evaluate_batched(maps, aux, *, scheme: str):
+    """Batched repair outcome: (ff, surviving_columns) per config.
+
+    ``maps``: (n, rows, cols) bool; ``aux``: (n, n_spares) spare health for
+    RR/CR/DR, (n,) DPPU capacities for HyCA.  Pure and jit/vmap-composable;
+    :func:`_jit_evaluate` is the cached jitted entry used by campaigns.
+    """
+    rows, cols = maps.shape[-2], maps.shape[-1]
+    fn = _eval_one(scheme, rows, cols)
+    return jax.vmap(fn)(maps, aux)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme",))
+def _jit_evaluate(maps, aux, *, scheme: str):
+    return evaluate_batched(maps, aux, scheme=scheme)
+
+
+def evaluate_reference(point: CampaignPoint, scheme: str):
+    """The per-config NumPy loop over the SAME sampled batch — the asserted-
+    identical reference for the vmapped path (mirrors ``boot_scan(
+    batched=False)``).  Returns (ff, surv) NumPy arrays."""
+    n = point.maps.shape[0]
+    ff = np.zeros(n, bool)
+    surv = np.zeros(n, np.int64)
+    for i in range(n):
+        if scheme == "HyCA":
+            assert point.hyca_caps is not None
+            ff[i], surv[i] = red.hyca_repair(point.maps[i], int(point.hyca_caps[i]))
+        else:
+            ff[i], surv[i] = red.repair(
+                scheme, point.maps[i], spare_faulty=point.spare_faulty[scheme][i]
+            )
+    return ff, surv
+
+
+def evaluate_point(
+    spec: CampaignSpec, point: CampaignPoint, *, engine: str = "vmapped"
+) -> list[CampaignResult]:
+    """Evaluate every scheme of ``spec`` on one sampled point.  ``engine``:
+    ``vmapped`` (one compiled program per scheme, configs on the vmap axis) or
+    ``reference`` (the legacy per-config NumPy loop on identical samples)."""
+    maps_dev = jnp.asarray(point.maps) if engine == "vmapped" else None
+    out = []
+    for scheme in spec.schemes:
+        if engine == "vmapped":
+            aux = (
+                jnp.asarray(point.hyca_caps, jnp.int32)
+                if scheme == "HyCA"
+                else jnp.asarray(point.spare_faulty[scheme])
+            )
+            ff_d, surv_d = _jit_evaluate(maps_dev, aux, scheme=scheme)
+            ff, surv = np.asarray(ff_d), np.asarray(surv_d)
+        elif engine == "reference":
+            ff, surv = evaluate_reference(point, scheme)
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+        n = spec.n_configs
+        ffp = float(ff.mean())
+        remaining = float(surv.mean() / spec.cols)
+        out.append(CampaignResult(
+            scheme=scheme,
+            per=point.per,
+            fault_model=spec.fault_model,
+            n_configs=n,
+            fully_functional_prob=ffp,
+            ffp_ci95=binomial_halfwidth(ffp, n),
+            remaining_power=remaining,
+            remaining_power_ci95=mean_halfwidth(surv / spec.cols),
+        ))
+    return out
+
+
+def run_campaign(
+    spec: CampaignSpec, pers: Sequence[float], *, engine: str = "vmapped"
+) -> CampaignRun:
+    """Sweep a PER grid: one sampled point per PER (maps shared across all
+    schemes by construction), all configs evaluated in one vmapped program
+    per scheme.  Host-level Python iterations = len(pers) · len(schemes) —
+    the legacy loop paid an extra ×n_configs."""
+    results: list[CampaignResult] = []
+    iterations = 0
+    for i, per in enumerate(pers):
+        point = sample_point(spec, float(per), seed=point_seed(spec.seed, i))
+        results.extend(evaluate_point(spec, point, engine=engine))
+        iterations += len(spec.schemes)
+    return CampaignRun(spec=spec, results=results, python_iterations=iterations)
+
+
+# --------------------------------------------------------------------------- #
+# batched FaultStates — accuracy campaigns over vmap(hyca_matmul)
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def _batched_packer(max_faults: int):
+    """One compiled FPT-merge packer per table size (a fresh jit-of-lambda
+    per call would defeat the jit cache and recompile every campaign)."""
+    empty = empty_fault_state(max_faults)
+    return jax.jit(
+        jax.vmap(lambda d, b, v: empty.merge(d, stuck_bit=b, stuck_val=v))
+    )
+
+
+def batched_fault_states(
+    maps: np.ndarray, *, max_faults: int | None = None, seed: int = 0
+) -> FaultState:
+    """(n, rows, cols) fault maps -> ONE FaultState pytree whose leaves carry
+    a leading config axis, ready for ``jax.vmap`` over protected /
+    unprotected forward passes.  Entries are leftmost-sorted per config (the
+    Section IV-B repair priority, same as ``fault_state_from_map``); stuck-at
+    signatures are sampled per PE.  ``max_faults`` must be a campaign-wide
+    static bound (default rows*cols, which can never truncate)."""
+    maps = np.asarray(maps, bool)
+    n, rows, cols = maps.shape
+    m = max_faults or rows * cols
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 32, size=(n, rows, cols)).astype(np.int32)
+    vals = rng.integers(0, 2, size=(n, rows, cols)).astype(np.int32)
+    pack = _batched_packer(m)
+    return pack(jnp.asarray(maps), jnp.asarray(bits), jnp.asarray(vals))
+
+
+def take_config(states: FaultState, i: int) -> FaultState:
+    """Slice one config's FaultState out of a batched (leading-axis) state."""
+    return FaultState(states.fpt[i], states.stuck_bit[i], states.stuck_val[i])
+
+
+# --------------------------------------------------------------------------- #
+# chaos hook — campaign-sampled fault maps into running servers
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ChaosSpec:
+    """Inject campaign-sampled fault maps into live serving replicas at a
+    chosen step — the fleet analogue of a Monte-Carlo fault configuration.
+    The runtime is NOT notified: detection must come from the ScanEngine
+    probes, which is exactly what the chaos experiment measures."""
+
+    per: float = 0.02
+    fault_model: str = "random"   # random | clustered
+    at_step: int = 0
+    replicas: tuple[int, ...] | None = None  # None = every live replica
+    seed: int = 0
+
+    def targets(self, n_replicas: int) -> tuple[int, ...]:
+        if self.replicas is None:
+            return tuple(range(n_replicas))
+        return tuple(i for i in self.replicas if 0 <= i < n_replicas)
+
+
+def chaos_maps(spec: ChaosSpec, n: int, rows: int, cols: int) -> np.ndarray:
+    """(n, rows, cols) campaign-distribution fault maps for chaos injection."""
+    rng = np.random.default_rng(spec.seed)
+    return fm.sample_fault_maps(rng, n, rows, cols, spec.per, spec.fault_model)  # type: ignore[arg-type]
+
+
+def apply_chaos(injector, fault_map: np.ndarray) -> int:
+    """Merge a sampled map into a FaultInjector's ground truth; returns the
+    number of NEW faults (already-faulty PEs are unchanged)."""
+    before = injector.n_faults
+    injector.inject_map(np.asarray(fault_map, bool))
+    return injector.n_faults - before

@@ -56,7 +56,17 @@ def clustered_fault_maps(
     over the array, geometric(1/cluster_size_mean) satellites at discretised
     Gaussian offsets (sigma = ``cluster_sigma`` PEs).  Spatial concentration
     is what breaks the region-locked RR/CR/DR schemes.
+
+    Guarantees (property-tested in tests/test_fault_models.py): every fault
+    lands in-bounds for ANY ``cluster_sigma`` (satellite offsets are clipped
+    to the array, so extreme sigmas degrade gracefully toward the random
+    model rather than erroring), and each map carries exactly its sampled
+    Binomial count.
     """
+    if cluster_size_mean < 1.0:
+        raise ValueError(f"cluster_size_mean must be >= 1, got {cluster_size_mean}")
+    if cluster_sigma < 0.0:
+        raise ValueError(f"cluster_sigma must be >= 0, got {cluster_sigma}")
     maps = np.zeros((n, rows, cols), dtype=bool)
     counts = rng.binomial(rows * cols, per, size=n)
     for i in range(n):

@@ -16,7 +16,7 @@ import numpy as np
 from repro.core import fault_models as fm
 from repro.core import redundancy as red
 from repro.core.array_sim import ConvLayer, layer_cycles
-from repro.core.reliability import _spares_for
+from repro.core.redundancy import n_spares
 
 C = ConvLayer
 
@@ -128,7 +128,7 @@ def scheme_throughput(
         for i in range(n_configs):
             _, surv[i] = red.hyca_repair(maps[i], int(caps[i]))
     else:
-        spare_faults = rng.random((n_configs, _spares_for(scheme, rows, cols))) < per
+        spare_faults = rng.random((n_configs, n_spares(scheme, rows, cols))) < per
         for i in range(n_configs):
             _, surv[i] = red.repair(scheme, maps[i], spare_faulty=spare_faults[i])
     # de-dup: throughput depends only on the surviving column count

@@ -23,6 +23,7 @@ import numpy as np
 __all__ = [
     "DPPUConfig",
     "dppu_capacity",
+    "n_spares",
     "rr_repair",
     "cr_repair",
     "dr_repair",
@@ -30,6 +31,22 @@ __all__ = [
     "repair",
     "SCHEMES",
 ]
+
+
+def n_spares(scheme: str, rows: int, cols: int) -> int:
+    """Spare-PE count a scheme fabricates for a rows×cols array: one per row
+    (RR), one per column (CR), one per diagonal of each square sub-array
+    (DR), none for HyCA (its redundancy is the DPPU)."""
+    if scheme == "RR":
+        return rows
+    if scheme == "CR":
+        return cols
+    if scheme == "DR":
+        n = min(rows, cols)
+        return n * (-(-max(rows, cols) // n))
+    if scheme == "HyCA":
+        return 0
+    raise ValueError(f"unknown scheme {scheme!r}")
 
 
 # --------------------------------------------------------------------------- #

@@ -5,6 +5,11 @@ Metrics (Section V-C):
     the metric for mission-critical deployments;
   * normalized remaining computing power — E[surviving columns] / columns,
     the metric for degradable deployments (column-granular discard).
+
+This module is the per-config NumPy *reference*; large campaigns should use
+:mod:`repro.core.campaign`, which evaluates the same schemes vmapped over the
+whole config batch in one jitted program (bit-identical at the same seed —
+asserted in tests/test_campaign.py).
 """
 from __future__ import annotations
 
@@ -17,6 +22,15 @@ from repro.core import fault_models as fm
 from repro.core import redundancy as red
 
 
+def point_seed(seed: int, per_index: int) -> int:
+    """Stable per-PER-point seed derivation (NOT the salted builtin ``hash``
+    — see docs/campaign.md).  Scheme-independent on purpose: every scheme at
+    one operating point is evaluated on the same fault maps.  Lives here (the
+    NumPy reference layer) so both the legacy sweep and the vmapped campaign
+    share one derivation."""
+    return seed + 7919 * (per_index + 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class ReliabilityResult:
     scheme: str
@@ -25,17 +39,6 @@ class ReliabilityResult:
     fully_functional_prob: float
     remaining_power: float
     n_configs: int
-
-
-def _spares_for(scheme: str, rows: int, cols: int) -> int:
-    if scheme == "RR":
-        return rows
-    if scheme == "CR":
-        return cols
-    if scheme == "DR":
-        n = min(rows, cols)
-        return n * (-(-max(rows, cols) // n))
-    return 0
 
 
 def evaluate_scheme(
@@ -63,7 +66,7 @@ def evaluate_scheme(
             ff[i], sc = red.hyca_repair(maps[i], int(caps[i]))
             surv[i] = sc
     else:
-        n_sp = _spares_for(scheme, rows, cols)
+        n_sp = red.n_spares(scheme, rows, cols)
         spare_faults = rng.random((n_configs, n_sp)) < per
         for i in range(n_configs):
             ff[i], sc = red.repair(scheme, maps[i], spare_faulty=spare_faults[i])
@@ -92,7 +95,7 @@ def sweep(
 ) -> list[ReliabilityResult]:
     out = []
     for s in schemes:
-        for p in pers:
+        for i, p in enumerate(pers):
             out.append(
                 evaluate_scheme(
                     s,
@@ -102,7 +105,13 @@ def sweep(
                     fault_model=fault_model,
                     n_configs=n_configs,
                     dppu=dppu,
-                    seed=seed + hash((s, round(p * 1e6))) % 100000,
+                    # Stable and scheme-independent: every scheme at one PER
+                    # point draws the SAME fault maps (evaluate_scheme samples
+                    # maps before any scheme-specific draws).  The old
+                    # derivation used the salted builtin ``hash((s, per))``,
+                    # so cross-scheme map sharing — and run-to-run
+                    # reproducibility — depended on PYTHONHASHSEED.
+                    seed=point_seed(seed, i),
                 )
             )
     return out

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import FaultState, HyCAConfig
+from repro.core.engine import FaultState, HyCAConfig, _pe_grids, repaired_grid
 from repro.kernels import ref
 from repro.kernels.dppu_recompute import dppu_recompute, scatter_overwrite
 from repro.kernels.ft_matmul import ft_matmul
@@ -21,8 +21,23 @@ def _interp(interpret: bool | None) -> bool:
     return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
+def fault_grids_device(state: FaultState, rows: int, cols: int, capacity: int):
+    """FPT → dense (rows, cols) bit/val/faulty/repaired grids, entirely on
+    device: jit/vmap-composable, so a *batched* FaultState (leading config
+    axis — ``campaign.batched_fault_states``) can drive the kernel pipeline
+    without a host round-trip per fault configuration.  Bit-identical to the
+    host AGU (:func:`fault_grids`) — asserted in tests/test_campaign.py."""
+    bit, val, faulty = _pe_grids(state, rows, cols)
+    repaired = repaired_grid(state, rows, cols, capacity)
+    return bit, val, faulty, repaired
+
+
 def fault_grids(state: FaultState, rows: int, cols: int, capacity: int):
-    """FPT → dense (rows, cols) bit/val/faulty/repaired grids (host AGU)."""
+    """FPT → dense (rows, cols) bit/val/faulty/repaired grids (host AGU).
+    Traced states (inside jit/vmap — the campaign's batched repair path) are
+    routed to :func:`fault_grids_device` automatically."""
+    if isinstance(state.fpt, jax.core.Tracer):
+        return fault_grids_device(state, rows, cols, capacity)
     fpt = np.asarray(state.fpt)
     bit = np.zeros((rows, cols), np.int32)
     val = np.zeros((rows, cols), np.int32)
@@ -104,6 +119,7 @@ __all__ = [
     "ft_matmul",
     "ref",
     "fault_grids",
+    "fault_grids_device",
     "faulty_array_matmul",
     "hyca_protected_matmul_twopass",
     "hyca_protected_matmul_fused",

@@ -94,6 +94,13 @@ def main(argv=None):
     ap.add_argument("--sla", type=int, default=0, help="deadline in steps (0 = none)")
     ap.add_argument("--max-steps", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos-per", type=float, default=0.0,
+                    help="chaos experiment: inject a campaign-sampled fault map "
+                         "at this PER into the running server (0 = off)")
+    ap.add_argument("--chaos-at", type=int, default=0,
+                    help="server step at which the chaos map is injected")
+    ap.add_argument("--chaos-model", default="random", choices=["random", "clustered"],
+                    help="fault distribution of the chaos map")
     args = ap.parse_args(argv)
 
     cfg = ServerConfig(
@@ -119,8 +126,21 @@ def main(argv=None):
         }
         for _ in range(args.requests)
     ]
+    on_step = None
+    chaos_state = {"injected": None}
+    if args.chaos_per > 0:
+        from repro.core.campaign import ChaosSpec, apply_chaos, chaos_maps
+
+        chaos = ChaosSpec(per=args.chaos_per, fault_model=args.chaos_model,
+                          at_step=args.chaos_at, seed=args.seed + 99)
+        cmap = chaos_maps(chaos, 1, args.rows, args.cols)[0]
+
+        def on_step(srv):
+            if srv.step_idx == chaos.at_step and chaos_state["injected"] is None:
+                chaos_state["injected"] = apply_chaos(srv.injector, cmap)
+
     t0 = time.perf_counter()
-    summary = server.run(trace, max_steps=args.max_steps)
+    summary = server.run(trace, max_steps=args.max_steps, on_step=on_step)
     dt = time.perf_counter() - t0
     from repro.core.detection import detection_cycles
 
@@ -128,6 +148,10 @@ def main(argv=None):
     print(f"[serve] arch={lm.name} mode={args.mode} slots={args.slots} "
           f"faults={server.injector.n_faults} confirmed={server.manager.n_confirmed} "
           f"surviving_cols={server.manager.surviving_cols}/{args.cols}")
+    if args.chaos_per > 0:
+        print(f"[serve] chaos: {chaos_state['injected'] or 0} faults injected "
+              f"at step {args.chaos_at} (PER {args.chaos_per}, {args.chaos_model}); "
+              f"detection is the ScanEngine's job")
     print(f"[serve] scan: block={args.scan_block} rows/step "
           f"({server.manager.steps_per_sweep} steps/sweep); cycle model "
           f"p={groups}: {detection_cycles(args.rows, args.cols, dppu_groups=groups)} "

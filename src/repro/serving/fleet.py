@@ -19,6 +19,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.campaign import ChaosSpec, apply_chaos, chaos_maps
 from repro.runtime.elastic import SparePool
 from repro.serving.fault_manager import FaultInjector
 from repro.serving.queue import Request
@@ -38,6 +39,11 @@ class FleetConfig:
     max_new_tokens: int = 8
     retire_fraction: float = 0.25  # drain a replica at/below this capacity fraction
     seed: int = 0
+    # chaos experiment: at chaos.at_step, merge one campaign-sampled fault
+    # map per targeted replica into its injector — the runtime is NOT told
+    # (no bist); the ScanEngine probes must find the faults, which is the
+    # detection-latency-under-burst measurement this hook exists for
+    chaos: ChaosSpec | None = None
     # scan_block=2: the batched ScanEngine sweeps the default 8x8 array every
     # 4 steps — background scanning is cheap enough (one jitted row-block
     # probe per step) to leave on fleet-wide
@@ -84,7 +90,19 @@ def run_fleet(cfg: FleetConfig) -> dict:
     replacements = 0
     requests_lost = 0
 
+    chaos_injected = 0
+    chaos_batch = (
+        chaos_maps(cfg.chaos, cfg.n_replicas, cfg.server.rows, cfg.server.cols)
+        if cfg.chaos is not None else None
+    )
+
     for step in range(cfg.steps):
+        if cfg.chaos is not None and step == cfg.chaos.at_step:
+            for i in cfg.chaos.targets(cfg.n_replicas):
+                if replicas[i].retired_at is None:
+                    chaos_injected += apply_chaos(
+                        replicas[i].server.injector, chaos_batch[i]
+                    )
         # arrivals: least-loaded routing over live replicas
         live = [r for r in replicas if r.retired_at is None]
         n_new = int(rng.poisson(cfg.request_rate * max(len(live), 1)))
@@ -138,6 +156,8 @@ def run_fleet(cfg: FleetConfig) -> dict:
         "goodput_per_step": float(np.mean(goodput_per_step)),
         "alive_final": alive_per_step[-1] if alive_per_step else cfg.n_replicas,
         "alive_mean": float(np.mean(alive_per_step)) if alive_per_step else float(cfg.n_replicas),
+        "chaos_injected": chaos_injected,
+        "chaos_at_step": cfg.chaos.at_step if cfg.chaos is not None else None,
         "retirements": retirements,
         "replacements": replacements,
         "requests_lost": requests_lost,

@@ -267,17 +267,22 @@ class FaultTolerantServer:
 
     # ------------------------------------------------------------------ #
     def run(self, trace: list[dict] | None = None, *, max_steps: int = 256,
-            drain: bool = True) -> dict:
+            drain: bool = True, on_step=None) -> dict:
         """Drive the server over a request trace.
 
         ``trace``: list of {"step", "prompt", "max_new_tokens", ...} dicts;
         requests are submitted when the loop reaches their arrival step.
         Runs until the trace is exhausted and all work is done (or
-        ``max_steps``).  Returns the metrics summary.
+        ``max_steps``).  ``on_step(server)`` — optional hook invoked at the
+        top of every loop iteration; the chaos-injection path
+        (docs/campaign.md) uses it to merge campaign-sampled fault maps into
+        the live injector mid-run.  Returns the metrics summary.
         """
         trace = sorted(trace or [], key=lambda t: t.get("step", 0))
         ti = 0
         while self.step_idx < max_steps:
+            if on_step is not None:
+                on_step(self)
             while ti < len(trace) and trace[ti].get("step", 0) <= self.step_idx:
                 t = trace[ti]
                 self.submit(

@@ -36,6 +36,56 @@ def test_random_maps_rate(rng):
     assert abs(maps.mean() - 0.02) < 0.002
 
 
+def _rate_halfwidth(per, n_cells, z=5.0):
+    """z-sigma binomial CI half-width on the empirical marginal fault rate
+    (z=5 keeps the property deterministic-in-practice across draws)."""
+    return z * np.sqrt(max(per * (1 - per), 1e-12) / n_cells) + 1e-9
+
+
+@given(st.floats(min_value=0.001, max_value=0.15), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_random_maps_marginal_rate_within_binomial_ci(per, seed):
+    n, rows, cols = 300, 16, 16
+    maps = fm.random_fault_maps(np.random.default_rng(seed), n, rows, cols, per)
+    assert abs(maps.mean() - per) < _rate_halfwidth(per, n * rows * cols)
+
+
+@given(st.floats(min_value=0.001, max_value=0.15), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_clustered_maps_marginal_rate_within_binomial_ci(per, seed):
+    """Clustered placement must not change the marginal fault rate — the
+    per-map count is Binomial(R*C, per) by construction."""
+    n, rows, cols = 150, 16, 16
+    maps = fm.clustered_fault_maps(np.random.default_rng(seed), n, rows, cols, per)
+    assert abs(maps.mean() - per) < _rate_halfwidth(per, n * rows * cols)
+
+
+@given(
+    st.floats(min_value=0.0, max_value=1e4),
+    st.floats(min_value=1.0, max_value=64.0),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_clustered_maps_in_bounds_at_extreme_sigma(sigma, size_mean, seed):
+    """Satellite offsets are clipped: ANY cluster_sigma keeps every fault in
+    the array and preserves the exact sampled count (huge sigmas simply decay
+    toward the random model)."""
+    r = np.random.default_rng(seed)
+    expect = np.random.default_rng(seed).binomial(8 * 8, 0.05, size=20)
+    maps = fm.clustered_fault_maps(
+        r, 20, 8, 8, 0.05, cluster_size_mean=size_mean, cluster_sigma=sigma
+    )
+    assert maps.shape == (20, 8, 8)
+    np.testing.assert_array_equal(maps.reshape(20, -1).sum(1), expect)
+
+
+def test_clustered_maps_param_validation(rng):
+    with pytest.raises(ValueError, match="cluster_size_mean"):
+        fm.clustered_fault_maps(rng, 1, 8, 8, 0.05, cluster_size_mean=0.5)
+    with pytest.raises(ValueError, match="cluster_sigma"):
+        fm.clustered_fault_maps(rng, 1, 8, 8, 0.05, cluster_sigma=-1.0)
+
+
 def test_clustered_count_matches_random(rng):
     """Spatial clustering must NOT change the fault-count distribution —
     that is what makes HyCA's FFP distribution-insensitive (Fig. 10)."""

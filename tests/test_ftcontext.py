@@ -86,6 +86,7 @@ def _batch_for(cfg, B, S, rng):
 # --------------------------------------------------------------------------- #
 # the headline claim, model-wide: protected == off across every family
 # --------------------------------------------------------------------------- #
+@pytest.mark.slow
 @pytest.mark.parametrize("dispatch", ["twopass", "fused"])
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_all_families_protected_bitexact_forward_and_decode(arch, dispatch, rng):
@@ -293,6 +294,7 @@ def test_layer_fraction_prefix_gates_main_stack(rng):
         assert np.array_equal(np.asarray(out), np.asarray(ref)) == expect_equal, frac
 
 
+@pytest.mark.slow
 def test_partial_layer_fraction_protected_still_bitexact(rng):
     """Half-protected stack keeps the invariant: protected == off."""
     cfg = _f32(get_smoke_config("qwen1.5-0.5b"))

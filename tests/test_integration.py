@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro.checkpoint.store import CheckpointManager
 from repro.configs import get_smoke_config
 from repro.core.engine import HyCAConfig, fault_state_from_map
@@ -13,6 +14,8 @@ from repro.dist.sharding import use_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import TrainConfig, init_state, make_train_step
 from repro.optim.adamw import AdamWConfig
+
+pytestmark = pytest.mark.slow  # CI fast lane skips these (full tier-1 still runs them)
 
 
 def _setup(arch="qwen1.5-0.5b", n_micro=2, batch=4, seq=64, **tc_kw):

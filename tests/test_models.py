@@ -4,9 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.shapes import SHAPES, applicable
 from repro.models.lm import decode_step, forward, init_cache, init_params, loss_fn
+
+pytestmark = pytest.mark.slow  # CI fast lane skips these (full tier-1 still runs them)
 
 
 def _batch_for(cfg, B, S, rng):
