@@ -31,6 +31,7 @@ def main(argv=None) -> int:
         fig13_runtime_vs_size,
         fig14_scalability,
         fig15_dppu_grouping,
+        repair_recovery,
         scan_latency,
         serving_goodput,
         tab01_detection,
@@ -52,6 +53,8 @@ def main(argv=None) -> int:
         "serving_goodput": serving_goodput.run,
         "ft_overhead": ft_overhead.run,
         "scan_latency": scan_latency.run,
+        # repair_recovery.run persists under experiments/bench/repair.json
+        "repair": repair_recovery.run,
     }
     if args.only:
         keep = set(args.only.split(","))

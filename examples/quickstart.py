@@ -4,14 +4,28 @@ A matmul runs on a virtual 32×32 output-stationary PE array.  We inject
 stuck-at faults, watch the unprotected output corrupt, repair it with the
 DPPU (bit-exact), and detect the faulty PE at runtime with the scan verifier.
 
-    PYTHONPATH=src python examples/quickstart.py
+Default engine is the PR-4 vmapped FaultCampaign: a whole batch of sampled
+fault configurations is evaluated through TWO compiled programs (protected /
+unprotected), and a reference subsample is asserted bit-identical to the
+legacy per-config engine path.  ``--engine legacy`` keeps the original
+one-configuration eager flow.
+
+    PYTHONPATH=src python examples/quickstart.py [--engine legacy]
 """
+import argparse
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import campaign as cp
 from repro.core.engine import HyCAConfig, fault_state_from_map, hyca_matmul
 from repro.core.fault_models import per_from_ber, random_fault_maps
 from repro.runtime.online_verify import OnlineVerifier
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--engine", default="campaign", choices=["campaign", "legacy"])
+args = ap.parse_args()
 
 rng = np.random.default_rng(0)
 
@@ -22,19 +36,57 @@ clean = hyca_matmul(x, w, None, cfg=HyCAConfig(mode="off"))
 
 # 2) inject faults at BER 1e-4  ->  PER ~ 0.6% (paper Eq. 1)
 per = float(per_from_ber(1e-4))
-fmap = random_fault_maps(rng, 1, 32, 32, per)[0]
-state = fault_state_from_map(fmap, rng=rng)
-print(f"BER 1e-4 -> PER {per:.2%} -> {int(fmap.sum())} faulty PEs")
 
-# 3) unprotected: outputs mapped to faulty PEs corrupt
-bad = hyca_matmul(x, w, state, cfg=HyCAConfig(mode="unprotected"))
-n_bad = int((np.asarray(bad) != np.asarray(clean)).sum())
-print(f"unprotected: {n_bad} corrupted output elements")
+if args.engine == "legacy":
+    fmap = random_fault_maps(rng, 1, 32, 32, per)[0]
+    state = fault_state_from_map(fmap, rng=rng)
+    print(f"BER 1e-4 -> PER {per:.2%} -> {int(fmap.sum())} faulty PEs")
 
-# 4) protected: the DPPU recomputes them — bit-exact recovery
-fixed = hyca_matmul(x, w, state, cfg=HyCAConfig(mode="protected"))
-assert (np.asarray(fixed) == np.asarray(clean)).all()
-print("protected:   bit-exact with the fault-free output")
+    # 3) unprotected: outputs mapped to faulty PEs corrupt
+    bad = hyca_matmul(x, w, state, cfg=HyCAConfig(mode="unprotected"))
+    n_bad = int((np.asarray(bad) != np.asarray(clean)).sum())
+    print(f"unprotected: {n_bad} corrupted output elements")
+
+    # 4) protected: the DPPU recomputes them — bit-exact recovery
+    fixed = hyca_matmul(x, w, state, cfg=HyCAConfig(mode="protected"))
+    assert (np.asarray(fixed) == np.asarray(clean)).all()
+    print("protected:   bit-exact with the fault-free output")
+else:
+    # campaign engine: a BATCH of sampled fault configurations, both modes
+    # evaluated vmapped in one compiled program each — no per-config Python
+    n_cfg = 8
+    maps = random_fault_maps(rng, n_cfg, 32, 32, per)
+    states = cp.batched_fault_states(maps, seed=1)
+    counts = maps.reshape(n_cfg, -1).sum(axis=1)
+    cfg_u = HyCAConfig(mode="unprotected")
+    cfg_p = HyCAConfig(mode="protected")
+    bad_all = jax.jit(jax.vmap(lambda s: hyca_matmul(x, w, s, cfg=cfg_u)))(states)
+    fix_all = jax.jit(jax.vmap(lambda s: hyca_matmul(x, w, s, cfg=cfg_p)))(states)
+    print(f"BER 1e-4 -> PER {per:.2%} -> {counts.tolist()} faulty PEs across "
+          f"{n_cfg} campaign configurations")
+
+    # 3) unprotected: outputs mapped to faulty PEs corrupt
+    n_bad = (np.asarray(bad_all) != np.asarray(clean)[None]).sum(axis=(1, 2))
+    print(f"unprotected: {n_bad.tolist()} corrupted output elements per config")
+
+    # 4) protected: bit-exact recovery for EVERY config within DPPU capacity
+    capacity = cfg_p.capacity
+    for i in range(n_cfg):
+        if counts[i] <= capacity:
+            assert (np.asarray(fix_all[i]) == np.asarray(clean)).all(), i
+    print(f"protected:   bit-exact with the fault-free output "
+          f"({int((counts <= capacity).sum())}/{n_cfg} configs within capacity {capacity})")
+
+    # the campaign's vmapped rows must match the legacy per-config engine
+    # path bit-for-bit on a reference subsample
+    for i in (0, n_cfg // 2, n_cfg - 1):
+        ref_bad = hyca_matmul(x, w, cp.take_config(states, i), cfg=cfg_u)
+        ref_fix = hyca_matmul(x, w, cp.take_config(states, i), cfg=cfg_p)
+        assert (np.asarray(ref_bad) == np.asarray(bad_all[i])).all()
+        assert (np.asarray(ref_fix) == np.asarray(fix_all[i])).all()
+    print("campaign:    reference subsample bit-identical to the legacy engine path")
+
+    fmap, bad = maps[0], bad_all[0]  # hand config 0 to the detection demo
 
 # 5) runtime detection: scan the array one PE per step (Section IV-D)
 v = OnlineVerifier(rows=32, cols=32)

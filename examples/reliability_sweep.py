@@ -1,36 +1,75 @@
 """Reliability sweep (paper Figs. 10/11 in one table):
 
     PYTHONPATH=src python examples/reliability_sweep.py [--model clustered]
+                                                        [--engine legacy]
+                                                        [--repair remap]
+
+Default engine is the PR-4 vmapped FaultCampaign (one compiled program per
+scheme, maps shared across schemes by construction); a reference subsample is
+re-evaluated with the legacy per-config NumPy loop and asserted bit-identical
+— the same seed produces the same streams, so FFP and remaining power match
+EXACTLY, not approximately.  ``--repair remap`` shows the repro.repair
+flattened capacity cliff on the HyCA remaining-power row (docs/repair.md).
 """
 import argparse
 
+from repro.core.campaign import CampaignSpec, evaluate_point, run_campaign, sample_point
 from repro.core.redundancy import DPPUConfig
-from repro.core.reliability import sweep
+from repro.core.reliability import point_seed, sweep
+
+SCHEMES = ("RR", "CR", "DR", "HyCA")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="random", choices=["random", "clustered"])
     ap.add_argument("--n", type=int, default=1500)
+    ap.add_argument("--engine", default="campaign", choices=["campaign", "legacy"])
+    ap.add_argument("--repair", default="none", choices=["none", "remap"],
+                    help="repro.repair remediation on the HyCA degradation model")
     args = ap.parse_args()
 
     pers = [0.005, 0.01, 0.02, 0.03, 0.04, 0.06]
-    res = sweep(("RR", "CR", "DR", "HyCA"), pers, fault_model=args.model,
-                n_configs=args.n, dppu=DPPUConfig(size=32))
+    if args.engine == "legacy":
+        if args.repair != "none":
+            raise SystemExit("--repair requires --engine campaign")
+        res = sweep(SCHEMES, pers, fault_model=args.model,
+                    n_configs=args.n, dppu=DPPUConfig(size=32))
+    else:
+        spec = CampaignSpec(rows=32, cols=32, fault_model=args.model,
+                            n_configs=args.n, schemes=SCHEMES,
+                            dppu=DPPUConfig(size=32), repair=args.repair)
+        run = run_campaign(spec, pers)
+        res = run.results
+        # reference subsample: re-evaluate the first operating point with the
+        # legacy per-config NumPy loop on the SAME samples — bit-identical
+        sub = CampaignSpec(rows=32, cols=32, fault_model=args.model,
+                           n_configs=min(args.n, 200), schemes=SCHEMES,
+                           dppu=DPPUConfig(size=32), repair=args.repair)
+        point = sample_point(sub, pers[0], seed=point_seed(sub.seed, 0))
+        for v, r in zip(evaluate_point(sub, point),
+                        evaluate_point(sub, point, engine="reference")):
+            assert v.fully_functional_prob == r.fully_functional_prob, v.scheme
+            assert v.remaining_power == r.remaining_power, v.scheme
+        print(f"[campaign] reference subsample ({sub.n_configs} configs) "
+              "bit-identical to the legacy per-config loop\n")
+
     ffp, power = {}, {}
     for r in res:
         ffp.setdefault(r.scheme, {})[r.per] = r.fully_functional_prob
         power.setdefault(r.scheme, {})[r.per] = r.remaining_power
 
-    print(f"fault model: {args.model}   (32x32 array, 32 spares / DPPU32)\n")
+    tag = " + repair=remap" if args.repair == "remap" else ""
+    print(f"fault model: {args.model}   (32x32 array, 32 spares / DPPU32, "
+          f"engine={args.engine}{tag})\n")
     hdr = "PER     " + "".join(f"{p:>8.1%}" for p in pers)
     print("fully-functional probability")
     print(hdr)
-    for s in ("RR", "CR", "DR", "HyCA"):
+    for s in SCHEMES:
         print(f"{s:8s}" + "".join(f"{ffp[s][p]:8.2f}" for p in pers))
     print("\nnormalized remaining computing power")
     print(hdr)
-    for s in ("RR", "CR", "DR", "HyCA"):
+    for s in SCHEMES:
         print(f"{s:8s}" + "".join(f"{power[s][p]:8.2f}" for p in pers))
 
 

@@ -7,13 +7,20 @@ Fault-tolerance contract (the checkpoint/restart leg of the 1000-node story):
   * leaves are stored one ``.npy`` per pytree leaf, named by the flattened
     key path (host-shardable: a multi-host launcher maps each host to the
     leaf shards it owns; on this single-host container every leaf is whole);
+  * the manifest records a sha256 content digest per leaf file and
+    ``restore`` verifies it before trusting the bytes — a tampered or
+    bit-rotted leaf is rejected even when its shape/dtype still parse
+    (manifests written before content digests existed restore with a
+    structure-only check);
   * ``restore`` re-places leaves onto the caller's shardings (device_put with
     NamedSharding) so a job can restart onto a *different* mesh — the elastic
-    re-shard path used by runtime.elastic.
+    re-shard path used by runtime.elastic and the repro.repair retrain loop
+    (repaired params saved on one mesh, restored onto a replacement).
 """
 from __future__ import annotations
 
 import hashlib
+import io
 import json
 import os
 import shutil
@@ -51,15 +58,24 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None) -> str:
     os.makedirs(tmp, exist_ok=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     names = []
+    digests = {}
     for path, leaf in leaves:
         arr = np.asarray(jax.device_get(leaf))
         name = _leaf_name(path)
-        np.save(os.path.join(tmp, name + ".npy"), arr)
+        # serialize once in memory: the digest hashes the same bytes that hit
+        # disk without reading the file back (checkpoints are I/O-bound)
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        data = buf.getvalue()
+        digests[name] = hashlib.sha256(data).hexdigest()
+        with open(os.path.join(tmp, name + ".npy"), "wb") as lf:
+            lf.write(data)
         names.append((name, tuple(arr.shape), str(arr.dtype)))
     manifest = {
         "step": step,
         "leaves": [[n, list(s), d] for n, s, d in names],
         "tree_hash": _tree_hash(names),
+        "leaf_sha256": digests,
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -84,17 +100,30 @@ def restore(ckpt_dir: str, step: int, like: Any, shardings: Any | None = None) -
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     jax.sharding.Sharding to re-place leaves (elastic re-shard)."""
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    _verify(d)
+    manifest = _verify(d)
+    digests = manifest.get("leaf_sha256", {})  # pre-digest manifests: {}
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     shard_leaves = (
         treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(paths)
     )
     out = []
     for (path, leaf), sh in zip(paths, shard_leaves):
-        arr = np.load(os.path.join(d, _leaf_name(path) + ".npy"))
+        name = _leaf_name(path)
+        # one read per leaf: verify the digest on the same buffer np.load
+        # parses (no second pass over multi-GB weight files)
+        with open(os.path.join(d, name + ".npy"), "rb") as lf:
+            data = lf.read()
+        expect_digest = digests.get(name)
+        if expect_digest is not None:
+            if hashlib.sha256(data).hexdigest() != expect_digest:
+                raise ValueError(
+                    f"{name}: leaf content hash mismatch in {d} — the file "
+                    "was modified after the checkpoint was published"
+                )
+        arr = np.load(io.BytesIO(data))
         expect = tuple(leaf.shape)
         if tuple(arr.shape) != expect:
-            raise ValueError(f"{_leaf_name(path)}: shape {arr.shape} != {expect}")
+            raise ValueError(f"{name}: shape {arr.shape} != {expect}")
         out.append(jax.device_put(arr, sh) if sh is not None else arr)
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -68,6 +68,8 @@ __all__ = [
     "CampaignRun",
     "ChaosSpec",
     "batched_fault_states",
+    "batched_repair_plans",
+    "identity_plans",
     "binomial_halfwidth",
     "chaos_maps",
     "device_clustered_maps",
@@ -135,9 +137,20 @@ class CampaignSpec:
     dppu: red.DPPUConfig | None = None   # HyCA DPPU (default: size=cols)
     seed: int = 0
     sampler: str = "numpy"               # numpy (legacy-aligned) | device
+    # repro.repair remediation applied to the HyCA scheme's degradation
+    # model: "none" keeps the paper's column-prefix discard; "remap" prunes
+    # one least-salient residue class per unrepairable column instead, so
+    # remaining computing power is cols - #broken columns — the flattened
+    # capacity cliff (docs/repair.md).  FFP is unchanged (remap adds no
+    # repair capacity).
+    repair: str = "none"
 
     def dppu_cfg(self) -> red.DPPUConfig:
         return self.dppu or red.DPPUConfig(size=self.cols)
+
+    def __post_init__(self):
+        if self.repair not in ("none", "remap"):
+            raise ValueError(f"unknown repair mode {self.repair!r}")
 
 
 @dataclasses.dataclass
@@ -161,6 +174,7 @@ class CampaignResult:
     ffp_ci95: float
     remaining_power: float
     remaining_power_ci95: float
+    repair: str = "none"
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -362,10 +376,18 @@ def _cr_eval_one(fault_map: jax.Array, spare_faulty: jax.Array, *, cols: int):
     return ff, jnp.where(ff, cols, first)
 
 
-def _hyca_eval_one(fault_map: jax.Array, capacity: jax.Array, *, cols: int):
+def _hyca_eval_one(fault_map: jax.Array, capacity: jax.Array, *, cols: int,
+                   repair: str = "none"):
     counts = fault_map.sum(axis=0).astype(jnp.int32)
     ff = counts.sum() <= capacity
     csum = jnp.cumsum(counts)
+    if repair == "remap":
+        # repro.repair: a column holds an unrepaired fault iff its trailing
+        # fault overflows capacity (leftmost-first priority); each such
+        # column costs ONE pruned residue class instead of the whole suffix
+        broken = (csum > capacity) & (counts > 0)
+        surv = (cols - broken.sum()).astype(jnp.int32)
+        return ff, jnp.where(ff, cols, surv)
     # first column whose cumulative fault count exceeds capacity — the
     # (capacity)-th leftmost fault's column (Section IV-B repair priority)
     first = jnp.argmax(csum >= capacity + 1).astype(jnp.int32)
@@ -459,7 +481,7 @@ def _dr_eval_one(fault_map: jax.Array, spare_faulty: jax.Array, *, rows: int,
     return ~bad_any, jnp.where(bad_any, first_col, cols)
 
 
-def _eval_one(scheme: str, rows: int, cols: int) -> Callable:
+def _eval_one(scheme: str, rows: int, cols: int, repair: str = "none") -> Callable:
     if scheme == "RR":
         return functools.partial(_rr_eval_one, cols=cols)
     if scheme == "CR":
@@ -467,28 +489,30 @@ def _eval_one(scheme: str, rows: int, cols: int) -> Callable:
     if scheme == "DR":
         return functools.partial(_dr_eval_one, rows=rows, cols=cols)
     if scheme == "HyCA":
-        return functools.partial(_hyca_eval_one, cols=cols)
+        return functools.partial(_hyca_eval_one, cols=cols, repair=repair)
     raise ValueError(f"unknown scheme {scheme!r}")
 
 
-def evaluate_batched(maps, aux, *, scheme: str):
+def evaluate_batched(maps, aux, *, scheme: str, repair: str = "none"):
     """Batched repair outcome: (ff, surviving_columns) per config.
 
     ``maps``: (n, rows, cols) bool; ``aux``: (n, n_spares) spare health for
-    RR/CR/DR, (n,) DPPU capacities for HyCA.  Pure and jit/vmap-composable;
-    :func:`_jit_evaluate` is the cached jitted entry used by campaigns.
+    RR/CR/DR, (n,) DPPU capacities for HyCA.  ``repair``: HyCA-only
+    remediation mode ("none" | "remap" — see :class:`CampaignSpec`).  Pure
+    and jit/vmap-composable; :func:`_jit_evaluate` is the cached jitted
+    entry used by campaigns.
     """
     rows, cols = maps.shape[-2], maps.shape[-1]
-    fn = _eval_one(scheme, rows, cols)
+    fn = _eval_one(scheme, rows, cols, repair)
     return jax.vmap(fn)(maps, aux)
 
 
-@functools.partial(jax.jit, static_argnames=("scheme",))
-def _jit_evaluate(maps, aux, *, scheme: str):
-    return evaluate_batched(maps, aux, scheme=scheme)
+@functools.partial(jax.jit, static_argnames=("scheme", "repair"))
+def _jit_evaluate(maps, aux, *, scheme: str, repair: str = "none"):
+    return evaluate_batched(maps, aux, scheme=scheme, repair=repair)
 
 
-def evaluate_reference(point: CampaignPoint, scheme: str):
+def evaluate_reference(point: CampaignPoint, scheme: str, repair: str = "none"):
     """The per-config NumPy loop over the SAME sampled batch — the asserted-
     identical reference for the vmapped path (mirrors ``boot_scan(
     batched=False)``).  Returns (ff, surv) NumPy arrays."""
@@ -498,7 +522,8 @@ def evaluate_reference(point: CampaignPoint, scheme: str):
     for i in range(n):
         if scheme == "HyCA":
             assert point.hyca_caps is not None
-            ff[i], surv[i] = red.hyca_repair(point.maps[i], int(point.hyca_caps[i]))
+            fn = red.hyca_remap_repair if repair == "remap" else red.hyca_repair
+            ff[i], surv[i] = fn(point.maps[i], int(point.hyca_caps[i]))
         else:
             ff[i], surv[i] = red.repair(
                 scheme, point.maps[i], spare_faulty=point.spare_faulty[scheme][i]
@@ -515,16 +540,17 @@ def evaluate_point(
     maps_dev = jnp.asarray(point.maps) if engine == "vmapped" else None
     out = []
     for scheme in spec.schemes:
+        repair = spec.repair if scheme == "HyCA" else "none"
         if engine == "vmapped":
             aux = (
                 jnp.asarray(point.hyca_caps, jnp.int32)
                 if scheme == "HyCA"
                 else jnp.asarray(point.spare_faulty[scheme])
             )
-            ff_d, surv_d = _jit_evaluate(maps_dev, aux, scheme=scheme)
+            ff_d, surv_d = _jit_evaluate(maps_dev, aux, scheme=scheme, repair=repair)
             ff, surv = np.asarray(ff_d), np.asarray(surv_d)
         elif engine == "reference":
-            ff, surv = evaluate_reference(point, scheme)
+            ff, surv = evaluate_reference(point, scheme, repair)
         else:
             raise ValueError(f"unknown engine {engine!r}")
         n = spec.n_configs
@@ -539,6 +565,7 @@ def evaluate_point(
             ffp_ci95=binomial_halfwidth(ffp, n),
             remaining_power=remaining,
             remaining_power_ci95=mean_halfwidth(surv / spec.cols),
+            repair=repair,
         ))
     return out
 
@@ -594,6 +621,44 @@ def batched_fault_states(
 def take_config(states: FaultState, i: int) -> FaultState:
     """Slice one config's FaultState out of a batched (leading-axis) state."""
     return FaultState(states.fpt[i], states.stuck_bit[i], states.stuck_val[i])
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "capacity", "prune"))
+def batched_repair_plans(
+    states: FaultState,
+    salience: jax.Array,
+    *,
+    rows: int,
+    cols: int,
+    capacity: int,
+    prune: bool = True,
+):
+    """One remap :class:`~repro.core.engine.RepairPlan` per campaign config,
+    planned in ONE compiled program.
+
+    ``states``: batched FaultState (:func:`batched_fault_states`);
+    ``salience``: (cols,) per-residue-class salience shared by every config
+    (per-config salience would mean per-config models).  The result's leaves
+    carry the leading config axis — feed them alongside the batched states to
+    ``vmap(hyca_matmul)`` for protected+remap accuracy campaigns
+    (benchmarks/repair_recovery.py)."""
+    from repro.repair.plan import remap_plan_device
+
+    return jax.vmap(
+        lambda fpt: remap_plan_device(
+            fpt, salience, rows=rows, cols=cols, capacity=capacity, prune=prune
+        )
+    )(states.fpt)
+
+
+def identity_plans(n: int, rows: int, cols: int):
+    """Batched identity plans (leading config axis) — the protected-only
+    baseline through the SAME compiled program as the remap runs, so
+    remap-vs-baseline comparisons are mode-as-data (the FTContext idiom)."""
+    from repro.core.engine import identity_plan
+
+    one = identity_plan(rows, cols)
+    return jax.tree.map(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), one)
 
 
 # --------------------------------------------------------------------------- #

@@ -142,6 +142,77 @@ class FaultState:
         )
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RepairPlan:
+    """Model-side remediation plan for fault states past DPPU capacity.
+
+    The engine maps output channel ``j`` onto PE column ``j % cols`` (its
+    *residue class*).  A plan re-routes that mapping and optionally prunes
+    what cannot be repaired:
+
+    ``col_map``: (cols,) int32 permutation — residue class ``c`` is computed
+    by PE column ``col_map[c]``.  The remap planner (``repro.repair.plan``)
+    chooses it so the least-salient residue classes land on the PE columns
+    holding unrepairable faults.  Identity = the engine's native mapping.
+
+    ``prune``: (rows, cols) bool PE mask — the PEs the plan *sacrifices*:
+    every output element they produce (through the remapped routing) is
+    zeroed (fault-aware pruning) instead of carrying stuck-at corruption.  A
+    zero is something retraining can adapt to; a flipped exponent bit is
+    not.  Pruning is plan INTENT — the planner's static snapshot of the
+    *confirmed* unrepairable PEs — not a read of the live fault table, so
+    faults the runtime has not confirmed still corrupt honestly (software
+    cannot zero what it does not know about).
+
+    Both fields are traced pytree *leaves* — swapping plans (or changing the
+    pruned set) through a compiled program never retraces, the same contract
+    :class:`FaultState` has.  ``identity_plan(rows, cols)`` (nothing pruned)
+    is bit-exact with ``plan=None`` by construction (an identity gather of
+    the fault grids followed by a select that never fires).
+    """
+
+    col_map: jax.Array
+    prune: jax.Array
+
+    def tree_flatten(self):
+        return (self.col_map, self.prune), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def identity_plan(rows: int, cols: int) -> RepairPlan:
+    """The no-op plan: native channel→PE mapping, nothing pruned.  The
+    fault-aware pruning fallback (identity mapping + the confirmed
+    unrepairable PEs masked) is :func:`repro.repair.prune.prune_plan`."""
+    return RepairPlan(jnp.arange(cols, dtype=jnp.int32), jnp.zeros((rows, cols), bool))
+
+
+def validate_repair_plan(plan: RepairPlan, rows: int, cols: int) -> RepairPlan:
+    """Host-side check that ``col_map`` is a permutation of range(cols) (a
+    non-permutation would silently drop or duplicate PE columns in the grid
+    gather) and ``prune`` is a (rows, cols) PE mask.  Traced plans are
+    returned unchecked (validate at build)."""
+    if isinstance(plan.col_map, jax.core.Tracer):
+        return plan
+    cm = np.asarray(plan.col_map)
+    if cm.shape != (cols,) or not np.array_equal(np.sort(cm), np.arange(cols)):
+        raise ValueError(
+            f"RepairPlan.col_map must be a permutation of range({cols}), "
+            f"got shape {cm.shape} values {cm[:8]}..."
+        )
+    if not isinstance(plan.prune, jax.core.Tracer):
+        pr = np.asarray(plan.prune)
+        if pr.shape != (rows, cols):
+            raise ValueError(
+                f"RepairPlan.prune must be a ({rows}, {cols}) PE mask, "
+                f"got shape {pr.shape}"
+            )
+    return plan
+
+
 def validate_fault_state(state: FaultState, rows: int, cols: int) -> FaultState:
     """Host-side FPT bounds check against the (rows, cols) array geometry.
 
@@ -270,6 +341,7 @@ def _hyca_matmul_impl(
     x: jax.Array,
     w: jax.Array,
     state: FaultState | None,
+    plan: RepairPlan | None = None,
     *,
     cfg: HyCAConfig,
     n_repair: int | None = None,
@@ -285,18 +357,41 @@ def _hyca_matmul_impl(
     shape = out.shape
     out2 = out.reshape(-1, shape[-1])
     bit, val, faulty = _pe_grids(state, cfg.rows, cfg.cols)
-    corrupted = _corrupt(out2, bit, val, faulty)
     if cfg.mode == "unprotected":
-        return corrupted.astype(out.dtype).reshape(shape)
-    # protected: DPPU recompute of the first n_repair FPT entries.  The DPPU
-    # can never repair more faults than it has capacity for, whatever the
-    # caller asks — an unclamped n_repair would overstate protection.
-    k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults, cfg.capacity)
-    repaired_mask = repaired_grid(state, cfg.rows, cfg.cols, k)
+        repaired_mask = jnp.zeros((cfg.rows, cfg.cols), bool)
+    else:
+        # protected: DPPU recompute of the first n_repair FPT entries.  The
+        # DPPU can never repair more faults than it has capacity for,
+        # whatever the caller asks — an unclamped n_repair would overstate
+        # protection.
+        k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults, cfg.capacity)
+        repaired_mask = repaired_grid(state, cfg.rows, cfg.cols, k)
+    prune_view = None
+    if plan is not None:
+        # remap: residue class c is computed by PE column col_map[c], so the
+        # grids seen by the output view are the PE grids gathered through the
+        # plan (repair still happens in PE space — which PEs the DPPU
+        # recomputes is unchanged; the plan changes which *channels* sit on
+        # the unrepaired ones)
+        cm = plan.col_map
+        bit, val, faulty = bit[:, cm], val[:, cm], faulty[:, cm]
+        repaired_mask = repaired_mask[:, cm]
+        prune_view = plan.prune[:, cm]
+    corrupted = _corrupt(out2, bit, val, faulty)
     m, n = out2.shape
-    ri = repaired_mask[jnp.arange(m)[:, None] % cfg.rows, jnp.arange(n)[None, :] % cfg.cols]
+    mi = jnp.arange(m)[:, None] % cfg.rows
+    ni = jnp.arange(n)[None, :] % cfg.cols
     # DPPU overwrite: recomputed (correct) value wherever repaired.
-    return jnp.where(ri, out2, corrupted).astype(out.dtype).reshape(shape)
+    res = jnp.where(repaired_mask[mi, ni], out2, corrupted)
+    if plan is not None:
+        # fault-aware pruning: outputs of the plan's sacrificed PEs become
+        # zero (a value retraining can adapt to) instead of stuck-at
+        # garbage.  Plan intent only — the pruned set is the planner's
+        # static snapshot of the CONFIRMED unrepairable PEs, NOT a read of
+        # the live fault table, so unconfirmed faults still corrupt
+        # honestly.
+        res = jnp.where(prune_view[mi, ni], jnp.zeros((), res.dtype), res)
+    return res.astype(out.dtype).reshape(shape)
 
 
 def hyca_matmul(
@@ -306,6 +401,7 @@ def hyca_matmul(
     *,
     cfg: HyCAConfig,
     n_repair: int | None = None,
+    plan: RepairPlan | None = None,
 ) -> jax.Array:
     """x: (..., K) @ w: (K, N) through the HyCA-protected virtual array
     (fault semantics on the flattened (M, N) output view).
@@ -313,12 +409,18 @@ def hyca_matmul(
     ``n_repair``: how many FPT entries the DPPU repairs (defaults to all
     entries up to DPPU capacity; the FPT is already leftmost-sorted).
 
+    ``plan``: optional :class:`RepairPlan` — remap which output residue
+    classes land on which PE columns and/or prune (zero) the outputs of
+    unrepaired faulty PEs.  ``None`` and the identity plan are bit-exact.
+
     Concrete (host-built) fault tables are bounds-checked against the array
     geometry here; traced ones are assumed validated at FTContext build.
     """
     if state is not None:
         validate_fault_state(state, cfg.rows, cfg.cols)
-    return _hyca_matmul_impl(x, w, state, cfg=cfg, n_repair=n_repair)
+    if plan is not None:
+        validate_repair_plan(plan, cfg.rows, cfg.cols)
+    return _hyca_matmul_impl(x, w, state, plan, cfg=cfg, n_repair=n_repair)
 
 
 def surviving_columns(state: FaultState, cfg: HyCAConfig) -> int:

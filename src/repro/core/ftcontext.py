@@ -39,10 +39,12 @@ import jax.numpy as jnp
 from repro.core.engine import (
     FaultState,
     HyCAConfig,
+    RepairPlan,
     _pe_grids,
     hyca_matmul,
     repaired_grid,
     validate_fault_state,
+    validate_repair_plan,
 )
 
 # Protection sites — the call-site vocabulary of the model stack.  A site
@@ -117,17 +119,22 @@ class FTContext:
     dispatch: str = "twopass"
     fused_backend: str = "ref"
     fused_block: tuple[int, int, int] = (128, 128, 128)
+    # repro.repair: one RepairPlan for all sites, or {site: RepairPlan}.
+    # A traced leaf like `state` — plan swaps never recompile (the dict's
+    # keys, like every other treedef change, recompile once when the plan
+    # *structure* first appears).
+    plan: object = None
 
     # ------------------------------------------------------------------ #
     # pytree protocol
     # ------------------------------------------------------------------ #
     def tree_flatten(self):
         aux = (self.hyca, self.policy, self.dispatch, self.fused_backend, self.fused_block)
-        return (self.state,), aux
+        return (self.state, self.plan), aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(leaves[0], *aux)
+        return cls(leaves[0], *aux, plan=leaves[1])
 
     # ------------------------------------------------------------------ #
     # static predicates
@@ -153,6 +160,17 @@ class FTContext:
         """Same static context, new fault table (per-step serving update)."""
         return dataclasses.replace(self, state=state)
 
+    def with_plan(self, plan) -> "FTContext":
+        """Same static context, new repair plan (repro.repair remediation).
+        Keeping the plan *structure* stable (always a plan, identity when no
+        remediation is active) makes plan swaps leaf-only: zero recompiles."""
+        return dataclasses.replace(self, plan=plan)
+
+    def _plan_for(self, site: str) -> RepairPlan | None:
+        if self.plan is None or isinstance(self.plan, RepairPlan):
+            return self.plan
+        return self.plan.get(site)
+
     # ------------------------------------------------------------------ #
     # op dispatch
     # ------------------------------------------------------------------ #
@@ -166,12 +184,13 @@ class FTContext:
         """
         if not self.protects(site):
             return jnp.matmul(x, w)
+        plan = self._plan_for(site)
         if self.dispatch == "plain":
             out = jnp.matmul(x, w)
         elif self.dispatch == "twopass":
-            out = hyca_matmul(x, w, self.state, cfg=self.hyca)
+            out = hyca_matmul(x, w, self.state, cfg=self.hyca, plan=plan)
         elif self.dispatch == "fused":
-            out = self._fused(x, w)
+            out = self._fused(x, w, plan)
         else:
             raise ValueError(f"unknown dispatch {self.dispatch!r}; known: {DISPATCHES}")
         return out.astype(x.dtype)
@@ -193,15 +212,15 @@ class FTContext:
             )
         b, e, c, d = x.shape
         xe = x.transpose(1, 0, 2, 3).reshape(e, b * c, d)
-        state, cfg = self.state, self.hyca
-        out = jax.vmap(lambda xi, wi: hyca_matmul(xi, wi, state, cfg=cfg))(xe, w)
+        state, cfg, plan = self.state, self.hyca, self._plan_for(site)
+        out = jax.vmap(lambda xi, wi: hyca_matmul(xi, wi, state, cfg=cfg, plan=plan))(xe, w)
         n = w.shape[-1]
         return out.reshape(e, b, c, n).transpose(1, 0, 2, 3).astype(x.dtype)
 
     # ------------------------------------------------------------------ #
     # fused dispatch
     # ------------------------------------------------------------------ #
-    def _fused(self, x: jax.Array, w: jax.Array) -> jax.Array:
+    def _fused(self, x: jax.Array, w: jax.Array, plan: RepairPlan | None = None) -> jax.Array:
         cfg = self.hyca
         capacity = cfg.capacity if cfg.mode == "protected" else 0
         if self.fused_backend == "ref":
@@ -210,7 +229,7 @@ class FTContext:
             # overwrite ≡ corrupt where faulty & ~repaired), so delegating
             # makes fused-vs-twopass bitwise identical by construction —
             # not merely up to cross-program matmul rounding.
-            return hyca_matmul(x, w, self.state, cfg=cfg)
+            return hyca_matmul(x, w, self.state, cfg=cfg, plan=plan)
         # Pallas kernel (compiled on TPU, interpret elsewhere): single fused
         # pass — repaired tiles skip the fault mux at drain, so the DPPU
         # recompute costs zero extra HBM traffic.  Tile→PE mapping is at
@@ -227,12 +246,27 @@ class FTContext:
         wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
         bit, val, faulty = _pe_grids(self.state, cfg.rows, cfg.cols)
         repaired = repaired_grid(self.state, cfg.rows, cfg.cols, capacity)
+        if plan is not None:
+            # remap before the kernel: the kernel's grid inputs already ARE
+            # the channel-view grids, so a plan is just a column gather —
+            # no kernel change needed
+            cm = plan.col_map
+            bit, val, faulty = bit[:, cm], val[:, cm], faulty[:, cm]
+            repaired = repaired[:, cm]
         out = ft_matmul(
             xp, wp, bit, val, faulty, repaired,
             bm=bm, bn=bn, bk=bk, rows=cfg.rows, cols=cfg.cols,
             interpret=self.fused_backend == "interpret",
         )
-        return out[:m, :n].reshape(*lead, n)
+        out = out[:m, :n]
+        if plan is not None:
+            # pruning is outside the kernel's stuck-at vocabulary: overwrite
+            # the sacrificed PEs' output positions with zeros post-kernel
+            pv = plan.prune[:, plan.col_map]
+            pi = pv[jnp.arange(m)[:, None] % cfg.rows,
+                    jnp.arange(n)[None, :] % cfg.cols]
+            out = jnp.where(pi, jnp.zeros((), out.dtype), out)
+        return out.reshape(*lead, n)
 
 
 def build_ftcontext(
@@ -242,6 +276,7 @@ def build_ftcontext(
     policy: ProtectPolicy | None = None,
     dispatch: str = "twopass",
     fused_block: tuple[int, int, int] = (128, 128, 128),
+    plan=None,
 ) -> FTContext:
     """Build an :class:`FTContext`, choosing the fused backend **once**.
 
@@ -259,6 +294,9 @@ def build_ftcontext(
         raise ValueError(f"unknown dispatch {dispatch!r}; known: {DISPATCHES}")
     if state is not None:
         validate_fault_state(state, hyca.rows, hyca.cols)
+    if plan is not None:
+        for p in (plan.values() if isinstance(plan, dict) else (plan,)):
+            validate_repair_plan(p, hyca.rows, hyca.cols)
     backend = "pallas" if jax.default_backend() == "tpu" else "ref"
     return FTContext(
         state=state,
@@ -267,6 +305,7 @@ def build_ftcontext(
         dispatch=dispatch,
         fused_backend=backend,
         fused_block=fused_block,
+        plan=plan,
     )
 
 

@@ -28,6 +28,7 @@ __all__ = [
     "cr_repair",
     "dr_repair",
     "hyca_repair",
+    "hyca_remap_repair",
     "repair",
     "SCHEMES",
 ]
@@ -224,6 +225,29 @@ def hyca_repair(fault_map: np.ndarray, capacity: int) -> tuple[bool, int]:
     # column bounds the surviving prefix.
     fault_cols = np.sort(np.nonzero(fault_map)[1])
     return False, int(fault_cols[capacity])
+
+
+def hyca_remap_repair(fault_map: np.ndarray, capacity: int) -> tuple[bool, int]:
+    """HyCA outcome under model-side remap/prune remediation (repro.repair).
+
+    Fully-functional is unchanged (remap does not add repair capacity), but
+    the degradation story is: instead of discarding the column prefix from the
+    first unrepaired fault rightward, the remap planner re-routes the least-
+    salient output residue classes onto the unrepairable PE columns and prunes
+    them — every OTHER column keeps producing trusted output.  Remaining
+    computing power is therefore ``cols - #distinct unrepaired-fault columns``
+    instead of the surviving prefix: the capacity cliff flattens into a
+    per-column haircut.  NumPy reference for the vmapped campaign evaluator.
+    """
+    rows, cols = fault_map.shape
+    n_faults = int(fault_map.sum())
+    if n_faults <= capacity:
+        return True, cols
+    # leftmost-first: the DPPU repairs the ``capacity`` leftmost faults; any
+    # column whose trailing fault overflows capacity hosts a pruned class
+    fault_cols = np.sort(np.nonzero(fault_map)[1])
+    unrepaired_cols = np.unique(fault_cols[capacity:])
+    return False, cols - int(unrepaired_cols.size)
 
 
 def effective_capacity(cfg: DPPUConfig, col: int) -> int:

@@ -85,6 +85,13 @@ def main(argv=None):
     ap.add_argument("--protect-fraction", type=float, default=1.0)
     ap.add_argument("--dispatch", default="twopass", choices=["twopass", "fused"],
                     help="FTContext kernel dispatch for protected matmuls")
+    ap.add_argument("--repair", default="none", choices=["none", "remap", "retrain"],
+                    help="model-side remediation past DPPU capacity "
+                         "(repro.repair): remap prunes least-salient channels "
+                         "onto broken columns; retrain also fine-tunes the "
+                         "replica's params on a budget")
+    ap.add_argument("--retrain-steps", type=int, default=4,
+                    help="fine-tune budget when --repair retrain")
     ap.add_argument("--scan-block", type=int, default=1,
                     help="PE-grid rows probed per scan step (must divide --rows; "
                          "p = scan_block*cols DPPU groups scan in parallel)")
@@ -108,6 +115,7 @@ def main(argv=None):
         mode=args.mode, rows=args.rows, cols=args.cols, dppu_size=args.dppu,
         protect_fraction=args.protect_fraction, dispatch=args.dispatch,
         scan_block=args.scan_block, fault_rate=args.fault_rate, seed=args.seed,
+        repair=args.repair, retrain_steps=args.retrain_steps,
     )
     server = FaultTolerantServer(cfg)
     if args.faults:
@@ -148,6 +156,10 @@ def main(argv=None):
     print(f"[serve] arch={lm.name} mode={args.mode} slots={args.slots} "
           f"faults={server.injector.n_faults} confirmed={server.manager.n_confirmed} "
           f"surviving_cols={server.manager.surviving_cols}/{args.cols}")
+    if args.repair != "none":
+        print(f"[serve] repair={args.repair}: remapped={server.manager.n_remapped} "
+              f"quality_fraction={server.manager.quality_fraction:.2f} "
+              f"events={len(server.repair_events)}")
     if args.chaos_per > 0:
         print(f"[serve] chaos: {chaos_state['injected'] or 0} faults injected "
               f"at step {args.chaos_at} (PER {args.chaos_per}, {args.chaos_model}); "

@@ -61,8 +61,15 @@ class TrainConfig:
     unroll_micro: bool = False
 
 
-def make_ftc(tc: TrainConfig, hyca: HyCAConfig | None, state: FaultState | None) -> FTContext | None:
-    """Build the training FTContext from config (None = protection off)."""
+def make_ftc(
+    tc: TrainConfig,
+    hyca: HyCAConfig | None,
+    state: FaultState | None,
+    plan=None,
+) -> FTContext | None:
+    """Build the training FTContext from config (None = protection off).
+    ``plan``: optional repro.repair RepairPlan (or per-site dict) — the
+    fault-aware retraining path runs the forward with it active."""
     if hyca is None or tc.hyca_mode == "off" or state is None:
         return None
     hcfg = dataclasses.replace(hyca, mode=tc.hyca_mode)
@@ -70,6 +77,7 @@ def make_ftc(tc: TrainConfig, hyca: HyCAConfig | None, state: FaultState | None)
         state, hcfg,
         policy=ProtectPolicy(layer_fraction=tc.protect_fraction),
         dispatch=tc.hyca_dispatch,
+        plan=plan,
     )
 
 
@@ -125,12 +133,21 @@ def make_train_step(
     *,
     hyca: HyCAConfig | None = None,
     profile: str = "tp",
+    plan=None,
+    grad_mask=None,
 ):
     """Returns (jitted_fn, in_shardings, out_shardings).
 
     jitted_fn(state, batch[, fault_state]) -> (state, metrics)
     ``profile``: "tp" (Megatron layout) or "dp" (replicated params, batch
     over every mesh axis — the small-arch §Perf profile).
+
+    Repair-aware retraining hooks (repro.repair.retrain):
+    ``plan`` — a RepairPlan (or per-site dict) the protected forward applies
+    (closed over: fixed for this step function; the serving runtime is where
+    plans swap as traced data).  ``grad_mask`` — a pytree of broadcastable
+    multipliers matching ``params``; gradients are masked before the
+    optimizer so frozen parameter groups stay bit-identical.
     """
     rules = {"dp": DP_RULES, "ep": EP_RULES}.get(profile, DEFAULT_RULES)
     sspec = state_specs(state_shapes, mesh, profile)
@@ -149,7 +166,7 @@ def make_train_step(
         else:
             fwd_params = params
         micro = _split_micro(batch, tc.n_micro)
-        ftc = make_ftc(tc, hyca, fault_state)
+        ftc = make_ftc(tc, hyca, fault_state, plan)
 
         def micro_step(carry, mb):
             gacc, lacc, aacc = carry
@@ -170,6 +187,8 @@ def make_train_step(
         else:
             (gsum, lsum, asum), _ = jax.lax.scan(micro_step, init, micro)
         grads = jax.tree.map(lambda g: g / tc.n_micro, gsum)
+        if grad_mask is not None:
+            grads = jax.tree.map(lambda g, m: g * m, grads, grad_mask)
 
         new_state = dict(state)
         if tc.grad_compress_ratio:
@@ -180,6 +199,14 @@ def make_train_step(
             state["opt"]["step"], peak_lr=tc.opt.lr, warmup=tc.warmup, total=tc.total_steps
         )
         new_params, new_opt = adamw_update(grads, state["opt"], params, tc.opt, lr)
+        if grad_mask is not None:
+            # zeroed grads alone don't freeze a leaf — AdamW's decoupled
+            # weight decay still shifts it; gate the update so frozen
+            # parameter groups stay bit-identical
+            new_params = jax.tree.map(
+                lambda new, old, m: jnp.where(m > 0, new, old),
+                new_params, params, grad_mask,
+            )
         new_state["params"] = new_params
         new_state["opt"] = new_opt
         metrics = {

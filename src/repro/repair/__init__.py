@@ -1,0 +1,51 @@
+"""repro.repair — model-side fault remediation past the DPPU capacity cliff.
+
+HyCA's DPPU recomputes up to ``capacity`` faulty PEs; beyond that the
+hardware story ends and the runtime used to retire capacity (column-prefix
+discard, replica retirement).  This package recovers that regime in the
+*model* instead — see docs/repair.md:
+
+  * :mod:`repro.repair.plan`   — salience-aware remap planner: a static
+    permutation routes the least-important output residue classes onto the
+    unrepairable PE columns (host + jit/vmap device planners);
+  * :mod:`repro.repair.remap`  — salience estimators (weight-norm, and a
+    :class:`~repro.repair.remap.SalienceProbe` for activation statistics);
+  * :mod:`repro.repair.prune`  — the no-permutation fallback: zero the
+    channels mapped onto unrepaired PEs in place;
+  * :mod:`repro.repair.retrain` — Reduce-style budgeted fine-tuning with the
+    faulty array in the forward pass, on
+    :func:`~repro.launch.train.make_train_step` (production) or vmapped over
+    a whole fault campaign (:func:`~repro.repair.retrain.finetune_vmapped`).
+
+Quick start::
+
+    from repro.repair import remap_plan, weight_salience
+
+    sal = weight_salience(params, hyca.cols)
+    plan = remap_plan(confirmed_state, hyca, sal)      # RepairPlan pytree
+    out = ftc.with_plan(plan).matmul(x, w, site="ffn")  # no recompile
+"""
+from repro.core.engine import RepairPlan, identity_plan  # noqa: F401
+from repro.repair.plan import (  # noqa: F401
+    plan_summary,
+    remap_plan,
+    remap_plan_device,
+    unrepaired_fault_columns,
+)
+from repro.repair.prune import (  # noqa: F401
+    prune_plan,
+    pruned_fraction,
+    pruned_pe_fraction,
+)
+from repro.repair.remap import (  # noqa: F401
+    SalienceProbe,
+    fold_channel_salience,
+    site_weight_salience,
+    weight_salience,
+)
+from repro.repair.retrain import (  # noqa: F401
+    RetrainConfig,
+    finetune_vmapped,
+    grad_mask,
+    retrain,
+)

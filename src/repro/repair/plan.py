@@ -1,0 +1,183 @@
+"""Remap planner — choose which output channels to sacrifice to broken PEs.
+
+Problem (docs/repair.md): the DPPU recomputes the ``capacity`` leftmost
+faults; every fault past that corrupts the outputs mapped onto its PE.  The
+serving runtime used to RETIRE the corrupted column and everything right of
+it (throughput cliff); the accuracy campaigns show the corruption itself is
+catastrophic (a stuck exponent bit is not noise).  But *which* channels sit
+on the broken PEs is a software choice: the engine maps output channel ``j``
+onto PE column ``j % cols`` (its residue class), and a static permutation of
+that mapping — weights loaded in permuted column order, outputs read back
+through the inverse permutation — moves any residue class onto any PE column
+with zero runtime cost.
+
+The planner therefore:
+
+  1. finds the PE columns holding unrepaired faults (``k`` distinct columns,
+     leftmost-first repair priority — the FPT is already sorted);
+  2. ranks residue classes by salience (activation- or weight-norm, folded
+     per class — see :mod:`repro.repair.remap`) and picks the ``k``
+     least-salient classes as victims;
+  3. builds the minimal-swap permutation that routes every victim class onto
+     a broken column (classes already in place stay put), and prunes (zeroes)
+     what lands there.
+
+The result is a :class:`~repro.core.engine.RepairPlan` whose leaves are
+traced data — swapping plans through a compiled serving/train step never
+retraces.  ``remap_plan_device`` is the jit/vmap-composable mirror used by
+the campaign engine (one plan per sampled fault configuration, all built in
+one compiled program); host/device parity is asserted in tests/test_repair.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (
+    FaultState,
+    HyCAConfig,
+    RepairPlan,
+    identity_plan,
+    validate_fault_state,
+)
+
+__all__ = [
+    "identity_plan",
+    "remap_plan",
+    "remap_plan_device",
+    "unrepaired_fault_columns",
+    "plan_summary",
+]
+
+
+def unrepaired_fault_columns(state: FaultState, cfg: HyCAConfig) -> np.ndarray:
+    """Distinct PE columns holding faults the DPPU cannot repair (the FPT
+    entries past ``cfg.capacity``; the FPT is leftmost-sorted)."""
+    fpt = np.asarray(state.fpt)
+    cols = fpt[fpt[:, 0] >= 0, 1]
+    return np.unique(cols[cfg.capacity:]) if cols.size > cfg.capacity else np.zeros(0, np.int64)
+
+
+def remap_plan(
+    state: FaultState,
+    cfg: HyCAConfig,
+    salience: np.ndarray,
+    *,
+    prune: bool = True,
+    broken_cols=None,
+) -> RepairPlan:
+    """Host-side planner: permutation routing the least-salient residue
+    classes onto the unrepairable PE columns.
+
+    ``salience``: (cols,) per-residue-class salience (higher = more
+    important), from :func:`repro.repair.remap.weight_salience` or an
+    activation probe.  Ties break by class index (stable sort) so the device
+    planner below reproduces the same plan bit-exactly.
+
+    ``broken_cols``: override the broken-column set (default: every column
+    holding over-capacity FPT entries).  The serving FaultManager passes its
+    REMAPPED columns only, so a ``max_remap_fraction`` budget that RETIRES
+    the overflow keeps the deployed plan and the published
+    ``quality_fraction`` accounting in agreement — retired columns are
+    discarded with their region, not pruned.
+
+    ``prune=False`` remaps without zeroing — the victims then carry the raw
+    stuck-at corruption; useful only for ablation, since a corrupted
+    low-salience channel is still unbounded garbage.  The default (remap +
+    prune) is the remediation the serving runtime deploys.
+    """
+    validate_fault_state(state, cfg.rows, cfg.cols)
+    s = np.asarray(salience, np.float64)
+    if s.shape != (cfg.cols,):
+        raise ValueError(f"salience must be ({cfg.cols},), got {s.shape}")
+    broken = (
+        unrepaired_fault_columns(state, cfg)
+        if broken_cols is None else np.unique(np.asarray(list(broken_cols), np.int64))
+    )
+    k = broken.size
+    if k == 0:
+        return identity_plan(cfg.rows, cfg.cols)
+    victims = np.argsort(s, kind="stable")[:k]
+    broken_set, victim_set = set(broken.tolist()), set(victims.tolist())
+    # minimal swaps: victims already on a broken column stay; each remaining
+    # victim (on a healthy column) trades places with the non-victim class
+    # currently occupying a broken column, paired in ascending index order
+    mis_v = sorted(v for v in victim_set if v not in broken_set)
+    mis_f = sorted(f for f in broken_set if f not in victim_set)
+    col_map = np.arange(cfg.cols, dtype=np.int32)
+    for v, f in zip(mis_v, mis_f):
+        col_map[v], col_map[f] = f, v
+    # the sacrificed PEs — the planner's static snapshot of the confirmed
+    # unrepairable faults (restricted to the covered columns), NOT a live
+    # read of the fault table at matmul time
+    pruned = np.zeros((cfg.rows, cfg.cols), bool)
+    if prune:
+        fpt = np.asarray(state.fpt)
+        for r, c in fpt[cfg.capacity:]:
+            if r >= 0 and c in broken_set:
+                pruned[r, c] = True
+    return RepairPlan(jnp.asarray(col_map), jnp.asarray(pruned))
+
+
+def remap_plan_device(
+    fpt: jax.Array,
+    salience: jax.Array,
+    *,
+    rows: int,
+    cols: int,
+    capacity: int,
+    prune: bool = True,
+) -> RepairPlan:
+    """Jit/vmap-composable mirror of :func:`remap_plan`.
+
+    ``fpt``: (max_faults, 2) leftmost-sorted fault table (-1 padding) — pass
+    ``state.fpt``, or a batched table under ``vmap`` for whole-campaign plan
+    construction (:func:`repro.core.campaign.batched_repair_plans`).  All
+    shapes are static; the number of broken columns is traced data, so one
+    compiled program plans every fault configuration.
+    """
+    idx = jnp.arange(cols, dtype=jnp.int32)
+    valid = fpt[:, 0] >= 0
+    over = valid & (jnp.arange(fpt.shape[0]) >= capacity)
+    c = jnp.where(over, fpt[:, 1], cols)
+    broken = jnp.zeros(cols, bool).at[c].set(True, mode="drop")
+    k = broken.sum()
+    # sacrificed PEs: the over-capacity FPT entries, scattered into a static
+    # (rows, cols) mask (plan intent — see remap_plan)
+    r = jnp.where(over, fpt[:, 0], rows)
+    pruned = jnp.zeros((rows, cols), bool).at[r, c].set(True, mode="drop")
+    pruned = pruned & bool(prune)
+    # stable ascending-salience rank per class (argsort-of-argsort)
+    rank = jnp.argsort(jnp.argsort(salience, stable=True), stable=True)
+    victim = rank < k
+    mis_v = victim & ~broken
+    mis_f = broken & ~victim
+    # pair the i-th misplaced victim with the i-th wrongly-occupied broken
+    # column, both in ascending class order (== the host planner's zip)
+    v_sorted = jnp.sort(jnp.where(mis_v, idx, cols))
+    f_sorted = jnp.sort(jnp.where(mis_f, idx, cols))
+    ok = (v_sorted < cols) & (f_sorted < cols)
+    col_map = idx.at[jnp.where(ok, v_sorted, cols)].set(
+        jnp.where(ok, f_sorted, 0), mode="drop"
+    )
+    col_map = col_map.at[jnp.where(ok, f_sorted, cols)].set(
+        jnp.where(ok, v_sorted, 0), mode="drop"
+    )
+    return RepairPlan(col_map.astype(jnp.int32), pruned)
+
+
+def plan_summary(plan: RepairPlan, state: FaultState, cfg: HyCAConfig) -> dict:
+    """Host-side report: what the plan sacrifices (docs/repair.md)."""
+    cm = np.asarray(plan.col_map)
+    pruned = np.asarray(plan.prune)
+    pruned_cols = np.nonzero(pruned.any(axis=0))[0]
+    broken = unrepaired_fault_columns(state, cfg)
+    return {
+        "n_broken_cols": int(broken.size),
+        "broken_cols": [int(c) for c in broken],
+        "pruned_pes": int(pruned.sum()),
+        "victim_classes": sorted(int(c) for c in np.nonzero(np.isin(cm, pruned_cols))[0]),
+        "moved_classes": int((cm != np.arange(cfg.cols)).sum()),
+        "quality_fraction": 1.0 - pruned_cols.size / cfg.cols,
+    }

@@ -1,0 +1,47 @@
+"""Fault-aware pruning — the remap plan's no-permutation degenerate case.
+
+When no salience information is available (or the planner is disabled), the
+cheapest remediation for over-capacity fault states is to zero every output
+element mapped onto an unrepaired faulty PE: the channels that would carry
+stuck-at garbage instead carry zeros, which downstream layers tolerate far
+better (and which retraining can explicitly adapt to — see
+:mod:`repro.repair.retrain`).  This is the identity-permutation
+``RepairPlan`` with the broken columns' resident classes pruned; this module
+names it and quantifies what it costs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FaultState, HyCAConfig, RepairPlan
+from repro.repair.plan import unrepaired_fault_columns
+
+__all__ = ["prune_plan", "pruned_fraction", "pruned_pe_fraction"]
+
+
+def prune_plan(state: FaultState, cfg: HyCAConfig) -> RepairPlan:
+    """Identity mapping + pruning on: zero the outputs of the confirmed
+    unrepairable PEs in place (no salience, no permutation — whatever
+    channels happen to sit on them are the ones sacrificed).  This is
+    :func:`repro.repair.plan.remap_plan` with uniform salience."""
+    pruned = np.zeros((cfg.rows, cfg.cols), bool)
+    fpt = np.asarray(state.fpt)
+    for r, c in fpt[cfg.capacity:]:
+        if r >= 0:
+            pruned[r, c] = True
+    return RepairPlan(jnp.arange(cfg.cols, dtype=jnp.int32), jnp.asarray(pruned))
+
+
+def pruned_fraction(state: FaultState, cfg: HyCAConfig) -> float:
+    """Fraction of PE *columns* hosting a pruned residue class — the quality
+    haircut a remap/prune plan accepts (0.0 while faults fit the DPPU)."""
+    return unrepaired_fault_columns(state, cfg).size / cfg.cols
+
+
+def pruned_pe_fraction(state: FaultState, cfg: HyCAConfig) -> float:
+    """Fraction of individual PEs whose outputs are zeroed (finer than the
+    column fraction: one broken PE prunes 1/rows of its column's work)."""
+    fpt = np.asarray(state.fpt)
+    n = int((fpt[:, 0] >= 0).sum())
+    return max(0, n - cfg.capacity) / (cfg.rows * cfg.cols)

@@ -1,0 +1,143 @@
+"""Salience — deciding which output channels the array can afford to lose.
+
+The remap planner (:mod:`repro.repair.plan`) needs one number per *residue
+class* (the ``cols`` groups of output channels ``j`` with equal ``j % cols``
+— everything the engine maps onto one PE column).  Two estimators, following
+the salience-aware remapping literature (Ait Alama et al., arXiv:2412.16208):
+
+  * **weight-norm salience** — L2 norm of each weight column, folded per
+    residue class and summed over every matmul feeding a site.  Free (no
+    data), good enough when weight magnitude tracks importance (it does for
+    trained dense/FFN stacks).
+  * **activation-norm salience** — mean |output| per residue class recorded
+    by running calibration batches through a :class:`SalienceProbe`, a
+    duck-typed FTContext stand-in.  Catches channels whose small weights
+    carry large activations.
+
+Both return plain (cols,) NumPy vectors — the planner's input — and per-site
+dicts for per-site plans.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping
+
+import jax
+import numpy as np
+
+from repro.core.ftcontext import SITES
+
+__all__ = [
+    "fold_channel_salience",
+    "weight_salience",
+    "site_weight_salience",
+    "SalienceProbe",
+]
+
+
+def fold_channel_salience(channel_salience: np.ndarray, cols: int) -> np.ndarray:
+    """(N,) per-channel salience -> (cols,) per-residue-class salience:
+    class ``c`` owns channels ``c, c+cols, c+2*cols, ...``."""
+    s = np.asarray(channel_salience, np.float64).ravel()
+    pad = (-s.size) % cols
+    return np.pad(s, (0, pad)).reshape(-1, cols).sum(axis=0)
+
+
+def _iter_weight_leaves(tree) -> Iterable[np.ndarray]:
+    for leaf in jax.tree_util.tree_leaves(tree):
+        a = np.asarray(leaf)
+        if a.ndim >= 2 and np.issubdtype(a.dtype, np.floating):
+            yield a
+
+
+def weight_salience(params, cols: int) -> np.ndarray:
+    """(cols,) aggregate weight-norm salience over every ≥2-D float leaf of
+    ``params`` (column L2 norms of the trailing axis, folded per residue
+    class).  The serving ModelBundle's one-plan-for-all-sites default."""
+    s = np.zeros(cols, np.float64)
+    for a in _iter_weight_leaves(params):
+        col_norm = np.linalg.norm(a.reshape(-1, a.shape[-1]), axis=0)
+        s += fold_channel_salience(col_norm, cols)
+    return s
+
+
+def site_weight_salience(site_weights: Mapping[str, Iterable], cols: int) -> dict[str, np.ndarray]:
+    """Per-site salience from an explicit {site: [weight matrices]} mapping —
+    feed each to the planner for per-site :class:`RepairPlan` dicts."""
+    out = {}
+    for site, ws in site_weights.items():
+        if site not in SITES:
+            raise ValueError(f"unknown site {site!r}; known: {SITES}")
+        out[site] = weight_salience(list(ws), cols)
+    return out
+
+
+class SalienceProbe:
+    """Duck-typed FTContext stand-in that *records* instead of corrupting.
+
+    Run one eager calibration forward with the probe threaded as ``ftc`` and
+    it accumulates mean |output| per residue class at every protected call
+    site — activation-norm salience for the planner:
+
+        probe = SalienceProbe(cols=hyca.cols)
+        forward(params, cfg, calib_batch, ftc=probe)
+        plan = remap_plan(state, hyca, probe.salience())
+
+    Implements exactly the surface models touch (``active``, ``protects``,
+    ``n_protected_layers``, ``matmul``, ``einsum``) and computes plain
+    matmuls, so the recorded statistics are the production activations.
+    """
+
+    def __init__(self, cols: int):
+        self.cols = cols
+        self._sums: dict[str, np.ndarray] = {}
+        self._counts: dict[str, int] = {}
+
+    # --- the FTContext surface models consume ---------------------------- #
+    @property
+    def active(self) -> bool:
+        return True
+
+    def protects(self, site: str) -> bool:
+        if site not in SITES:
+            raise ValueError(f"unknown site {site!r}; known: {SITES}")
+        return True
+
+    def n_protected_layers(self, n_layers: int) -> int:
+        return n_layers
+
+    def matmul(self, x, w, *, site: str):
+        import jax.numpy as jnp
+
+        self.protects(site)  # validates the site name
+        out = jnp.matmul(x, w)
+        self._record(site, out)
+        return out
+
+    def einsum(self, spec: str, x, w, *, site: str):
+        import jax.numpy as jnp
+
+        self.protects(site)
+        out = jnp.einsum(spec, x, w)
+        self._record(site, out)
+        return out
+
+    # --------------------------------------------------------------------- #
+    def _record(self, site: str, out) -> None:
+        a = np.abs(np.asarray(jax.device_get(out), np.float64))
+        per_channel = a.reshape(-1, a.shape[-1]).mean(axis=0)
+        folded = fold_channel_salience(per_channel, self.cols)
+        self._sums[site] = self._sums.get(site, np.zeros(self.cols)) + folded
+        self._counts[site] = self._counts.get(site, 0) + 1
+
+    def salience(self, site: str | None = None) -> np.ndarray:
+        """(cols,) activation salience — one site's, or all sites pooled."""
+        if site is not None:
+            if site not in self._sums:
+                raise KeyError(f"no activations recorded for site {site!r}")
+            return self._sums[site] / self._counts[site]
+        if not self._sums:
+            raise ValueError("probe has recorded no activations yet")
+        return sum(self._sums.values()) / sum(self._counts.values())
+
+    def site_salience(self) -> dict[str, np.ndarray]:
+        return {s: self._sums[s] / self._counts[s] for s in self._sums}

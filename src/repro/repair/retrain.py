@@ -1,0 +1,187 @@
+"""Reduce-style fault-aware retraining (Hanif & Shafique, arXiv:2305.12595).
+
+Remap + prune (:mod:`repro.repair.plan`, :mod:`repro.repair.prune`) turn the
+over-capacity corruption into structured zeros; retraining then recovers most
+of the pruned accuracy by fine-tuning the model *with the faulty array in the
+forward pass* — the surviving channels learn to cover for the zeroed ones.
+Following Reduce, the budget is deliberately small: a handful of steps, only
+the affected parameter groups unfrozen.
+
+Two entry points:
+
+  * :func:`retrain` — the production path: layers
+    :func:`repro.launch.train.make_train_step` (microbatched, sharded,
+    checkpoint-compatible) with the faulty ``FTContext`` + plan active and a
+    gradient mask freezing everything outside the configured trainable set.
+    Returns repaired params ready to swap into a running
+    :class:`~repro.serving.server.FaultTolerantServer` (the repaired-params
+    save→restore round-trip onto a different mesh is covered by
+    ``checkpoint.store`` tests — elastic re-shard).
+  * :func:`finetune_vmapped` — the campaign-scale path: one jitted program
+    fine-tuning a small model under EVERY sampled fault configuration at once
+    (``vmap`` over batched FaultStates + RepairPlans); powers the
+    protected+retrain curve in ``benchmarks/repair_recovery.py`` and the
+    cliff-flattening golden-stats tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FaultState, HyCAConfig, RepairPlan
+
+__all__ = ["RetrainConfig", "grad_mask", "retrain", "finetune_vmapped"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrainConfig:
+    """Budget knobs (docs/repair.md): everything here bounds retraining cost.
+
+    ``steps``/``lr``/``n_micro``/``batch``/``seq_len`` — the optimization
+    budget; ``trainable`` — param-path substrings allowed to update (Reduce's
+    "affected layers": default the FFN stacks, the cheapest high-capacity
+    group); ``layer_range`` — optional [lo, hi) slice of the stacked
+    main-stack layers to unfreeze (leaves whose first path component is
+    ``blocks``), narrowing the budget further.
+    """
+
+    steps: int = 8
+    lr: float = 5e-4
+    n_micro: int = 1
+    batch: int = 4
+    seq_len: int = 32
+    trainable: tuple[str, ...] = ("ffn",)
+    layer_range: tuple[int, int] | None = None
+    protect_fraction: float = 1.0
+    dispatch: str = "twopass"
+    seed: int = 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def grad_mask(params: Any, rc: RetrainConfig) -> Any:
+    """Pytree of broadcastable float32 masks: 1 where a leaf may update.
+
+    Whole-leaf freezes are rank-matched scalars (zero HBM cost); a
+    ``layer_range`` on stacked ``blocks/*`` leaves becomes a
+    (n_layers, 1, ..) vector mask so only that slice of the scan-stacked
+    parameters trains.
+    """
+
+    def one(path, leaf):
+        p = _path_str(path)
+        on = (not rc.trainable) or any(t in p for t in rc.trainable)
+        if not on:
+            return jnp.zeros((1,) * leaf.ndim, jnp.float32)
+        if rc.layer_range is not None and p.split("/", 1)[0] == "blocks":
+            lo, hi = rc.layer_range
+            n = leaf.shape[0]
+            v = ((np.arange(n) >= lo) & (np.arange(n) < hi)).astype(np.float32)
+            return jnp.asarray(v.reshape((n,) + (1,) * (leaf.ndim - 1)))
+        return jnp.ones((1,) * leaf.ndim, jnp.float32)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def retrain(
+    params: Any,
+    cfg,
+    *,
+    hyca: HyCAConfig,
+    state: FaultState,
+    plan: RepairPlan | dict | None,
+    rc: RetrainConfig | None = None,
+    data: Any = None,
+    mesh: Any = None,
+) -> tuple[Any, dict]:
+    """Budgeted fault-aware fine-tune of ``params`` for LM config ``cfg``.
+
+    The forward pass runs protected on the faulty array (``state``) with the
+    repair ``plan`` active — gradients see the pruned zeros and adapt the
+    surviving channels.  ``data``: anything with ``.batch(step)`` (defaults
+    to :class:`~repro.data.pipeline.SyntheticLM`; real deployments pass a
+    replay buffer of production traffic).  Returns ``(repaired_params,
+    report)``.
+    """
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.dist.sharding import use_mesh
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import TrainConfig, make_train_step
+    from repro.optim.adamw import AdamWConfig, adamw_init
+
+    rc = rc or RetrainConfig()
+    mesh = mesh or make_host_mesh()
+    tc = TrainConfig(
+        n_micro=rc.n_micro,
+        opt=AdamWConfig(lr=rc.lr),
+        warmup=1,
+        total_steps=max(rc.steps, 1),
+        hyca_mode="protected",
+        hyca_dispatch=rc.dispatch,
+        protect_fraction=rc.protect_fraction,
+    )
+    # make_train_step donates its state: copy so the caller's live params
+    # (e.g. a serving bundle's) are not invalidated by the first step
+    own = jax.tree.map(lambda a: jnp.array(a, copy=True), params)
+    train_state = {"params": own, "opt": adamw_init(own)}
+    data = data or SyntheticLM(
+        DataConfig(seed=rc.seed, batch=rc.batch, seq_len=rc.seq_len), cfg
+    )
+    batch0 = jax.tree.map(jnp.asarray, data.batch(0))
+    sshapes = jax.eval_shape(lambda: train_state)
+    bshapes = jax.eval_shape(lambda: batch0)
+    mask = grad_mask(params, rc)
+    step_fn, _, _ = make_train_step(
+        cfg, tc, mesh, sshapes, bshapes, hyca=hyca, plan=plan, grad_mask=mask
+    )
+    losses: list[float] = []
+    with use_mesh(mesh):
+        for step in range(rc.steps):
+            batch = jax.tree.map(jnp.asarray, data.batch(step))
+            train_state, metrics = step_fn(train_state, batch, state)
+            losses.append(float(metrics["loss"]))
+    report = {
+        "steps": rc.steps,
+        "losses": losses,
+        "loss_first": losses[0] if losses else None,
+        "loss_last": losses[-1] if losses else None,
+        "trainable": list(rc.trainable),
+    }
+    return train_state["params"], report
+
+
+def finetune_vmapped(
+    loss_fn: Callable[[Any, FaultState, RepairPlan], jax.Array],
+    params: Any,
+    states: FaultState,
+    plans: RepairPlan,
+    *,
+    steps: int,
+    lr: float,
+) -> Any:
+    """SGD fine-tune under every fault configuration at once.
+
+    ``loss_fn(params, state, plan) -> scalar`` must route its forward through
+    the faulty array (e.g. ``hyca_matmul(..., state, cfg=cfg, plan=plan)``).
+    ``states``/``plans`` carry a leading config axis
+    (:func:`repro.core.campaign.batched_fault_states` /
+    :func:`repro.core.campaign.batched_repair_plans`).  Returns params with
+    that same leading axis — one adapted model per fault configuration, all
+    trained in ONE jitted program (``vmap`` outside, ``lax.scan`` over steps
+    inside)."""
+
+    def one(state, plan):
+        def step(p, _):
+            g = jax.grad(lambda q: loss_fn(q, state, plan))(p)
+            return jax.tree.map(lambda a, b: (a - lr * b).astype(a.dtype), p, g), None
+
+        out, _ = jax.lax.scan(step, params, None, length=steps)
+        return out
+
+    return jax.jit(jax.vmap(one))(states, plans)

@@ -11,6 +11,7 @@ See docs/serving.md for the architecture.  Quick start::
 from repro.serving.fault_manager import (  # noqa: F401
     CONFIRMED,
     HEALTHY,
+    REMAPPED,
     REPAIRED,
     RETIRED,
     SUSPECT,

@@ -14,7 +14,7 @@ Two actors, deliberately separated:
     columns — the paper's p DPPU groups probing p PEs in parallel) against
     the complementary ±probe pair, and drives each PE through the lifecycle
 
-        HEALTHY -> SUSPECT -> CONFIRMED -> REPAIRED | RETIRED
+        HEALTHY -> SUSPECT -> CONFIRMED -> REPAIRED | REMAPPED | RETIRED
 
     A flagged PE becomes SUSPECT; ``confirm_hits`` total flags promote it to
     CONFIRMED and merge it into the engine FPT — the batched, deduped,
@@ -22,11 +22,17 @@ Two actors, deliberately separated:
     the old host-side ``append_fault`` path could append the same PE twice
     and silently burn repair capacity).  Confirmed faults within DPPU
     capacity are REPAIRED (recomputed every window); the leftmost-first
-    overflow is RETIRED — its column and everything right of it is
-    disconnected from the output buffers, so the array keeps computing
-    *correct* results on the surviving column prefix at proportionally lower
-    throughput.  The manager publishes that as ``capacity_fraction`` and the
-    scheduler shrinks admission accordingly.
+    overflow is, with ``FaultManagerConfig.remap`` (repro.repair,
+    docs/repair.md), REMAPPED — the remap planner routes a pruned
+    least-salient output residue class onto its column, which keeps serving
+    at full throughput with a small quality haircut
+    (``quality_fraction``) — up to ``max_remap_fraction`` of the columns.
+    Overflow past that budget (or with remap disabled) is RETIRED — its
+    column and everything right of it is disconnected from the output
+    buffers, so the array keeps computing *correct* results on the surviving
+    column prefix at proportionally lower throughput.  The manager publishes
+    that as ``capacity_fraction`` and the scheduler shrinks admission
+    accordingly.
 
     The power-on scan (:meth:`FaultManager.boot_scan`) is ONE jitted call:
     ``jax.lax.scan`` over sweeps, each sweep a ``lax.scan`` over row-blocks
@@ -58,7 +64,12 @@ from repro.core.scan import (
 )
 
 HEALTHY, SUSPECT, CONFIRMED, REPAIRED, RETIRED = "healthy", "suspect", "confirmed", "repaired", "retired"
-_LIFECYCLE = (HEALTHY, SUSPECT, CONFIRMED, REPAIRED, RETIRED)
+# repro.repair outcome: an over-capacity confirmed fault whose PE column is
+# handled model-side — the remap planner routes a least-salient (pruned)
+# output residue class onto it, so the column keeps serving instead of being
+# disconnected (RETIRED).  See docs/repair.md.
+REMAPPED = "remapped"
+_LIFECYCLE = (HEALTHY, SUSPECT, CONFIRMED, REPAIRED, REMAPPED, RETIRED)
 
 _merge = jax.jit(lambda fs, det: fs.merge(det))
 
@@ -172,6 +183,13 @@ class FaultManagerConfig:
     probe_window: int = 8      # S — MACs recomputed per check
     max_boot_sweeps: int = 4   # whole-array sweeps in the power-on scan
     scan_block: int = 1        # PE-grid rows probed per scan step (p = scan_block·cols)
+    # model-side remediation (repro.repair): over-capacity confirmed faults
+    # become REMAPPED (their column keeps serving with a pruned low-salience
+    # class) instead of RETIRED, up to max_remap_fraction of the columns —
+    # past that the quality haircut is deemed unacceptable and the overflow
+    # retires (column-prefix discard) as before
+    remap: bool = False
+    max_remap_fraction: float = 0.5
 
 
 class FaultManager:
@@ -197,6 +215,7 @@ class FaultManager:
         )
         self.scans = 0
         self.repairs = 0
+        self.remaps = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -216,21 +235,57 @@ class FaultManager:
         fpt = np.asarray(self.confirmed_state.fpt)
         return frozenset((int(r), int(c)) for r, c in fpt if r >= 0)
 
+    def _label_coords(self, label: str) -> frozenset[tuple[int, int]]:
+        return frozenset(
+            (int(r), int(c)) for r, c in np.argwhere(self.pe_state == label)
+        )
+
+    def repaired_coords(self) -> frozenset[tuple[int, int]]:
+        return self._label_coords(REPAIRED)
+
+    def remapped_coords(self) -> frozenset[tuple[int, int]]:
+        return self._label_coords(REMAPPED)
+
+    def retired_coords(self) -> frozenset[tuple[int, int]]:
+        return self._label_coords(RETIRED)
+
     @property
     def n_confirmed(self) -> int:
         return len(self.confirmed_coords())
 
     @property
+    def n_remapped(self) -> int:
+        return len(self.remapped_coords())
+
+    @property
+    def remapped_cols(self) -> frozenset[int]:
+        """Distinct PE columns carrying a pruned (remapped) residue class."""
+        return frozenset(c for _, c in self.remapped_coords())
+
+    @property
     def surviving_cols(self) -> int:
         if self.n_confirmed <= self.hyca.capacity:
             return self.hyca.cols
-        return surviving_columns(self.confirmed_state, self.hyca)
+        retired = self.retired_coords()
+        if not retired:
+            return self.hyca.cols  # every overflow fault is remapped
+        if not self.cfg.remap:
+            # no remediation: identical to the legacy leftmost-overflow math
+            return surviving_columns(self.confirmed_state, self.hyca)
+        return min(c for _, c in retired)
 
     @property
     def capacity_fraction(self) -> float:
-        """1.0 while confirmed faults fit the DPPU; the surviving column
-        prefix fraction once they exceed it (throughput, not correctness)."""
+        """1.0 while confirmed faults fit the DPPU (or are remapped
+        model-side); the surviving column prefix fraction once faults
+        RETIRE columns (throughput, not correctness)."""
         return self.surviving_cols / self.hyca.cols
+
+    @property
+    def quality_fraction(self) -> float:
+        """Fraction of PE columns producing *trusted* (non-pruned) output —
+        the accuracy-side cost of remapping (1.0 without remediation)."""
+        return 1.0 - len(self.remapped_cols) / self.hyca.cols
 
     def counts(self) -> dict[str, int]:
         return {s: int((self.pe_state == s).sum()) for s in _LIFECYCLE}
@@ -238,14 +293,29 @@ class FaultManager:
     # ------------------------------------------------------------------ #
     def _reassign_repair(self) -> None:
         """Leftmost-first: the first ``capacity`` confirmed faults are DPPU-
-        repaired; the overflow is retired with its column region."""
+        repaired; the overflow is REMAPPED model-side (repro.repair, when
+        enabled and within the column budget) or retired with its column
+        region."""
         coords = sorted(self.confirmed_coords(), key=lambda rc: (rc[1], rc[0]))
+        max_remap_cols = (
+            int(np.floor(self.cfg.max_remap_fraction * self.hyca.cols))
+            if self.cfg.remap else 0
+        )
+        remap_cols: set[int] = set()
         for i, (r, c) in enumerate(coords):
-            new = REPAIRED if i < self.hyca.capacity else RETIRED
+            if i < self.hyca.capacity:
+                new = REPAIRED
+            elif c in remap_cols or len(remap_cols) < max_remap_cols:
+                remap_cols.add(c)
+                new = REMAPPED
+            else:
+                new = RETIRED
             if self.pe_state[r, c] != new:
                 self.pe_state[r, c] = new
                 if new == REPAIRED:
                     self.repairs += 1
+                elif new == REMAPPED:
+                    self.remaps += 1
 
     def _sync(self) -> None:
         """Fold the engine's hit counters into lifecycle labels and merge the

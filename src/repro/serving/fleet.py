@@ -160,6 +160,10 @@ def run_fleet(cfg: FleetConfig) -> dict:
         "chaos_at_step": cfg.chaos.at_step if cfg.chaos is not None else None,
         "retirements": retirements,
         "replacements": replacements,
+        "remapped_total": sum(
+            r.server.manager.n_remapped for r in replicas if r.retired_at is None
+        ),
+        "repair_events": sum(len(r.server.repair_events) for r in replicas),
         "requests_lost": requests_lost,
         "spares_remaining": pool.remaining,
         "scan_steps_total": sum(r.server.manager.scans for r in replicas),
@@ -175,6 +179,8 @@ def run_fleet(cfg: FleetConfig) -> dict:
                 "true_faults": r.server.injector.n_faults,
                 "confirmed": r.server.manager.n_confirmed,
                 "surviving_cols": r.server.manager.surviving_cols,
+                "remapped": r.server.manager.n_remapped,
+                "quality_fraction": r.server.manager.quality_fraction,
             }
             for r in replicas
         ],

@@ -29,6 +29,8 @@ class StepRecord:
     surviving_cols: int
     scan_ok: bool | None           # None when no scan ran this step
     completed: int
+    remapped: int = 0              # PEs handled model-side (repro.repair)
+    quality_fraction: float = 1.0  # fraction of columns with trusted output
 
 
 class ServingMetrics:
@@ -109,4 +111,6 @@ class ServingMetrics:
             "surviving_cols_final": self.steps[-1].surviving_cols if self.steps else self.cols,
             "effective_slots_min": min((r.effective_slots for r in self.steps), default=self.n_slots),
             "effective_slots_final": self.steps[-1].effective_slots if self.steps else self.n_slots,
+            "remapped_final": self.steps[-1].remapped if self.steps else 0,
+            "quality_fraction_final": self.steps[-1].quality_fraction if self.steps else 1.0,
         }

@@ -36,6 +36,14 @@ identical compiled step, fed different fault views:
 That makes the paper's headline claim testable end-to-end: with every fault
 confirmed (BIST) and #faults ≤ capacity, ``protected`` serves tokens
 bit-exact with ``off``.
+
+Past DPPU capacity, ``ServerConfig.repair`` enables the repro.repair
+remediation (docs/repair.md): over-capacity confirmed faults become REMAPPED
+— they stay in the served fault state while the active RepairPlan (a traced
+leaf next to the fault table) prunes salience-chosen channels onto them —
+and ``repair="retrain"`` additionally fine-tunes this replica's params on a
+budget and swaps them into the running step.  Both swaps are leaf-only:
+the compiled step never retraces.
 """
 from __future__ import annotations
 
@@ -47,10 +55,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.engine import FaultState, HyCAConfig, empty_fault_state
+from repro.core.engine import FaultState, HyCAConfig, empty_fault_state, identity_plan
 from repro.core.ftcontext import ProtectPolicy, build_ftcontext
 from repro.core.redundancy import DPPUConfig
 from repro.models.lm import LMConfig, decode_step, init_cache, init_params
+from repro.repair.plan import remap_plan
+from repro.repair.remap import weight_salience
 from repro.serving.fault_manager import FaultInjector, FaultManager, FaultManagerConfig
 from repro.serving.metrics import ServingMetrics, StepRecord
 from repro.serving.queue import CompletedRequest, Request, RequestQueue
@@ -73,6 +83,16 @@ class ServerConfig:
     bist: bool = True              # power-on: confirm the factory fault map
     boot_scan: bool = False        # probe-based power-on sweep instead
     fault_rate: float = 0.0        # Poisson new faults per step (wearout)
+    # model-side remediation past DPPU capacity (repro.repair, docs/repair.md):
+    #   none    — overflow faults RETIRE columns (throughput cliff, PR-1..4)
+    #   remap   — overflow columns are REMAPPED: a salience-chosen pruned
+    #             residue class lands on them; the replica keeps full slots
+    #   retrain — remap + a budgeted fault-aware fine-tune of this replica's
+    #             params (the repaired params are swapped into the running
+    #             server — the background repair hook)
+    repair: str = "none"
+    retrain_steps: int = 4         # fine-tune budget when repair == "retrain"
+    max_remap_fraction: float = 0.5
     seed: int = 0
 
     def hyca(self) -> HyCAConfig:
@@ -99,6 +119,11 @@ class ModelBundle:
         self.params = init_params(jax.random.key(cfg.seed), self.lm)
         self.max_faults = cfg.rows * cfg.cols
         self.empty_state = empty_fault_state(self.max_faults)
+        # the identity RepairPlan: every step carries a plan leaf, so when
+        # the repair hook swaps in a real remap plan the compiled step is
+        # reused (leaf-only change — zero recompiles, docs/repair.md)
+        self.identity_plan = identity_plan(cfg.rows, cfg.cols)
+        self._salience: np.ndarray | None = None
         # One FTContext per bundle: static dispatch/policy chosen here; the
         # per-step fault table is swapped in with with_state (a traced leaf,
         # so the jitted step never recompiles on fault-table updates).
@@ -106,13 +131,15 @@ class ModelBundle:
             self.empty_state, self.hyca,
             policy=ProtectPolicy(layer_fraction=cfg.protect_fraction),
             dispatch=cfg.dispatch,
+            plan=self.identity_plan,
         )
 
         lmc, ftc = self.lm, self.ftc
 
-        def _step(params, cache, tok, fstate):
+        def _step(params, cache, tok, fstate, plan):
             return decode_step(
-                params, lmc, cache, {"token": tok}, ftc=ftc.with_state(fstate)
+                params, lmc, cache, {"token": tok},
+                ftc=ftc.with_state(fstate).with_plan(plan),
             )
 
         def _reset(cache, slot):
@@ -126,6 +153,16 @@ class ModelBundle:
         self.step_fn = jax.jit(_step, donate_argnums=(1,))
         self.reset_fn = jax.jit(_reset, donate_argnums=(0,))
 
+    @property
+    def salience(self) -> np.ndarray:
+        """Weight-norm salience per PE residue class — the remap planner's
+        default importance signal for this model.  Computed lazily on the
+        first repair event: servers with ``repair="none"`` (the default)
+        never pay the full-parameter host sweep."""
+        if self._salience is None:
+            self._salience = weight_salience(self.params, self.cfg.cols)
+        return self._salience
+
     def fresh_cache(self) -> Any:
         return init_cache(self.lm, self.cfg.n_slots, self.cfg.smax)
 
@@ -138,14 +175,27 @@ class FaultTolerantServer:
                  injector: FaultInjector | None = None):
         if cfg.mode not in ("off", "protected", "unprotected"):
             raise ValueError(f"unknown mode {cfg.mode!r}")
+        if cfg.repair not in ("none", "remap", "retrain"):
+            raise ValueError(f"unknown repair mode {cfg.repair!r}")
         self.cfg = cfg
         self.bundle = bundle or ModelBundle(cfg)
         self.lm = self.bundle.lm
         self.cache = self.bundle.fresh_cache()
+        # per-replica view of the bundle params: the retrain repair hook
+        # swaps repaired params into THIS server without touching fleet
+        # siblings sharing the compiled bundle
+        self.params = self.bundle.params
+        self.plan = self.bundle.identity_plan
+        self.repair_events: list[dict] = []
+        self._repair_key: tuple[int, int] | None = None
         self.injector = injector or FaultInjector(cfg.rows, cfg.cols, seed=cfg.seed + 1)
         self.manager = FaultManager(
             self.bundle.hyca, self.injector,
-            FaultManagerConfig(confirm_hits=cfg.confirm_hits, scan_block=cfg.scan_block),
+            FaultManagerConfig(
+                confirm_hits=cfg.confirm_hits, scan_block=cfg.scan_block,
+                remap=cfg.repair != "none",
+                max_remap_fraction=cfg.max_remap_fraction,
+            ),
         )
         self.queue = RequestQueue()
         self.scheduler = ContinuousBatchingScheduler(cfg.n_slots, cfg.smax)
@@ -155,7 +205,7 @@ class FaultTolerantServer:
         )
         self.step_idx = 0
         self._next_rid = 0
-        self._fstate_key: tuple[int, int] | None = None
+        self._fstate_key: tuple[int, int, int] | None = None
         self._fstate = self.bundle.empty_state
         if cfg.mode == "protected":
             if cfg.bist:
@@ -184,12 +234,25 @@ class FaultTolerantServer:
     def _current_fstate(self) -> FaultState:
         if self.cfg.mode == "off":
             return self.bundle.empty_state
-        key = (self.injector.version, self.manager.n_confirmed)
+        key = (self.injector.version, self.manager.n_confirmed, self.manager.n_remapped)
         if key != self._fstate_key:
-            exclude = (
-                self.manager.confirmed_coords()
-                if self.cfg.mode == "protected" else frozenset()
-            )
+            if self.cfg.mode != "protected":
+                exclude = frozenset()
+            else:
+                # repaired faults are DPPU-recomputed and retired faults are
+                # disconnected with their column region — both clean.
+                # REMAPPED faults stay IN the served state: their PEs still
+                # corrupt, and the active RepairPlan is what routes pruned
+                # low-salience channels onto them (docs/repair.md).  The
+                # engine NEVER repairs anything in the served state — the
+                # bundle's HyCAConfig is mode="unprotected" (see
+                # ServerConfig.hyca), so DPPU repair is modelled by this
+                # exclusion alone and cannot be double-counted against the
+                # remapped overflow (regression-pinned in tests/test_repair
+                # .py::test_remapped_faults_really_corrupt_without_plan).
+                exclude = (
+                    self.manager.repaired_coords() | self.manager.retired_coords()
+                )
             self._fstate = self.injector.fault_state(
                 exclude=exclude, max_faults=self.bundle.max_faults
             )
@@ -207,6 +270,57 @@ class FaultTolerantServer:
         return max(1, int(np.floor(self.cfg.n_slots * frac)))
 
     # ------------------------------------------------------------------ #
+    # repro.repair — the background repair hook (docs/repair.md)
+    # ------------------------------------------------------------------ #
+    def apply_repair(self, *, plan=None, params=None) -> None:
+        """Swap a repair plan and/or repaired params into the running server.
+        Both are traced leaves of the compiled step — no recompilation."""
+        if plan is not None:
+            self.plan = plan
+        if params is not None:
+            self.params = params
+
+    def _maybe_repair(self) -> None:
+        if self.cfg.repair == "none" or self.cfg.mode != "protected":
+            return
+        key = (self.manager.n_confirmed, self.manager.n_remapped)
+        if self.manager.n_remapped == 0 or key == self._repair_key:
+            return
+        self._repair_key = key
+        # plan ONLY the columns the manager actually REMAPPED: overflow past
+        # the max_remap_fraction budget is RETIRED (column-region discard),
+        # and pruning victims for discarded columns would double-charge the
+        # quality accounting
+        plan = remap_plan(
+            self.manager.confirmed_state, self.bundle.hyca, self.bundle.salience,
+            broken_cols=self.manager.remapped_cols,
+        )
+        params = None
+        if self.cfg.repair == "retrain" and self.cfg.retrain_steps > 0:
+            from repro.repair.retrain import RetrainConfig, retrain
+
+            params, report = retrain(
+                self.params, self.lm,
+                hyca=self.bundle.hyca,
+                state=self.manager.confirmed_state,
+                plan=plan,
+                rc=RetrainConfig(
+                    steps=self.cfg.retrain_steps,
+                    seq_len=min(32, self.cfg.smax),
+                    seed=self.cfg.seed,
+                ),
+            )
+        self.apply_repair(plan=plan, params=params)
+        self.repair_events.append({
+            "step": self.step_idx,
+            "mode": self.cfg.repair,
+            "n_remapped": self.manager.n_remapped,
+            "remapped_cols": sorted(self.manager.remapped_cols),
+            "quality_fraction": self.manager.quality_fraction,
+            "retrained": params is not None,
+        })
+
+    # ------------------------------------------------------------------ #
     def step(self) -> list[CompletedRequest]:
         cfg = self.cfg
         step = self.step_idx
@@ -220,6 +334,11 @@ class FaultTolerantServer:
         scan_ok: bool | None = None
         if cfg.mode == "protected":
             scan_ok, _ = self.manager.scan_step()
+
+        # 2b. background repair hook: newly REMAPPED faults trigger a plan
+        # rebuild (and, in retrain mode, a budgeted fine-tune) — swapped into
+        # the running step as traced leaves, zero recompiles
+        self._maybe_repair()
 
         # 3. degraded capacity -> admission limit
         eff = self._effective_slots()
@@ -240,7 +359,8 @@ class FaultTolerantServer:
         # 5. one batched decode over all slots
         feed = self.scheduler.plan_feed()
         logits, self.cache = self.bundle.step_fn(
-            self.bundle.params, self.cache, jnp.asarray(feed), self._current_fstate()
+            self.params, self.cache, jnp.asarray(feed), self._current_fstate(),
+            self.plan,
         )
         sampled = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
 
@@ -261,6 +381,8 @@ class FaultTolerantServer:
             surviving_cols=self.manager.surviving_cols,
             scan_ok=scan_ok,
             completed=len(completed),
+            remapped=self.manager.n_remapped,
+            quality_fraction=self.manager.quality_fraction,
         ), completed)
         self.step_idx += 1
         return completed

@@ -1,11 +1,32 @@
-"""Checkpoint store + elastic/straggler runtime tests."""
+"""Checkpoint store + elastic/straggler runtime tests.
+
+The hypothesis-based property tests skip individually when hypothesis is
+absent; the deterministic checkpoint tests (incl. the tamper-rejection and
+different-mesh round-trip coverage the repro.repair retrain path relies on)
+always run."""
 import os
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip; everything else still runs
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):  # noqa: D103 - placeholder decorator
+        return pytest.mark.skip(reason="property tests need hypothesis")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None  # strategy placeholders, never drawn
+
+    st = _St()
 
 from repro.checkpoint.store import CheckpointManager, latest_step, restore, save
 from repro.runtime.elastic import plan_remesh, spare_pool_ffp
@@ -41,6 +62,81 @@ def test_shape_mismatch_rejected(tmp_path):
     bad = {"a": jnp.zeros((7,)), "n": {"b": jnp.ones((2, 3))}}
     with pytest.raises(ValueError):
         restore(str(tmp_path), 1, bad)
+
+
+def test_tampered_leaf_content_rejected(tmp_path):
+    """The manifest's per-leaf sha256 rejects a leaf whose BYTES changed even
+    though shape/dtype still parse — flipping values in a checkpointed weight
+    file must not restore silently."""
+    save(str(tmp_path), 1, TREE)
+    fname = tmp_path / "step_00000001" / "a.npy"
+    arr = np.load(fname)
+    arr[3] = 99.0  # same shape, same dtype, different bytes
+    np.save(fname, arr)
+    with pytest.raises(ValueError, match="content hash mismatch"):
+        restore(str(tmp_path), 1, TREE)
+    # the manifest itself still verifies (names/shapes unchanged), so the
+    # rejection is specifically the content digest
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_pre_digest_manifest_still_restores(tmp_path):
+    """Manifests written before content digests existed restore with the
+    structure-only check (no KeyError on the missing field)."""
+    import json
+
+    save(str(tmp_path), 1, TREE)
+    mpath = tmp_path / "step_00000001" / "manifest.json"
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["leaf_sha256"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    out = restore(str(tmp_path), 1, TREE)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(6, dtype=np.float32))
+
+
+def test_repaired_params_roundtrip_onto_different_mesh(tmp_path):
+    """The repro.repair retrain path: repaired params saved from one mesh
+    restore onto a DIFFERENT mesh via explicit shardings (the elastic
+    re-shard contract) — values bit-identical, placement on the new mesh."""
+    import dataclasses as _dc
+
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core.engine import HyCAConfig, fault_state_from_map
+    from repro.core.redundancy import DPPUConfig
+    from repro.repair import RetrainConfig, remap_plan, retrain, weight_salience
+
+    hyca = HyCAConfig(rows=8, cols=8, dppu=DPPUConfig(size=4, group_size=4),
+                      mode="protected")
+    fmap = np.zeros((8, 8), bool)
+    fmap.reshape(-1)[np.random.default_rng(0).choice(64, 9, replace=False)] = True
+    state = fault_state_from_map(fmap, max_faults=9)
+    params = {"blocks": {"ffn": {"up": jnp.asarray(
+        np.random.default_rng(1).standard_normal((2, 8, 16)), jnp.float32)}}}
+    # a minimal "repaired params" artifact: plan metadata rides in extra
+    plan = remap_plan(state, hyca, weight_salience(params, 8))
+    from repro.repair import plan_summary
+
+    save(str(tmp_path), 7, params,
+         extra={"repair": plan_summary(plan, state, hyca)})
+
+    dev = np.asarray(jax.devices()[:1])
+    mesh_b = Mesh(dev.reshape(1, 1), ("replica", "model"))  # a different mesh
+    shardings = {"blocks": {"ffn": {"up": NamedSharding(mesh_b, P(None, None, "model"))}}}
+    like = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params
+    )
+    out = restore(str(tmp_path), 7, like, shardings)
+    leaf = out["blocks"]["ffn"]["up"]
+    np.testing.assert_array_equal(
+        np.asarray(leaf), np.asarray(params["blocks"]["ffn"]["up"])
+    )
+    assert leaf.sharding == shardings["blocks"]["ffn"]["up"]
+    # and RetrainConfig stays serializable alongside (budget provenance)
+    assert _dc.asdict(RetrainConfig())["steps"] == 8
 
 
 def test_manager_gc_and_resume(tmp_path):

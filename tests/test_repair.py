@@ -1,0 +1,673 @@
+"""repro.repair acceptance tests — model-side remediation past the DPPU cliff.
+
+  * planner: victims are exactly the k least-salient residue classes, the
+    col_map is a permutation, broken columns host victims, and the jittable
+    device planner is bit-identical to the host planner (the
+    ``boot_scan(batched=False)`` idiom);
+  * engine semantics: an identity plan is BIT-EXACT with the existing
+    protected path (plan=None) in every mode — and swapping identity → remap
+    plans through a compiled FTContext step never retraces (à la
+    test_ftcontext);
+  * pruning zeroes exactly the outputs mapped onto unrepaired faulty PEs,
+    nothing else;
+  * retrain: the budgeted LM fine-tune moves only the configured trainable
+    groups (frozen leaves bit-identical — AdamW weight decay included) and
+    reduces loss with the faulty array in the forward pass;
+  * serving: over-capacity confirmed faults become REMAPPED instead of
+    RETIRED, the replica keeps full admission capacity, repaired params swap
+    into the running server, and the chaos hook composes with repair;
+  * golden-stats suite (@campaign_stats, the campaign-stats CI job): at a PER
+    past the capacity cliff, protected+remap and protected+retrain accuracy
+    beat protected-only within the campaign's own CIs — the flattened cliff
+    — and the campaign ``repair="remap"`` remaining-power curve dominates the
+    column-discard baseline (vmapped == NumPy reference bit-exactly).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import campaign as cp
+from repro.core.engine import (
+    FaultState,
+    HyCAConfig,
+    RepairPlan,
+    empty_fault_state,
+    fault_state_from_map,
+    hyca_matmul,
+    identity_plan,
+)
+from repro.core.fault_models import random_fault_maps
+from repro.core.ftcontext import build_ftcontext
+from repro.core.redundancy import DPPUConfig, hyca_remap_repair, hyca_repair
+from repro.repair import (
+    RetrainConfig,
+    SalienceProbe,
+    finetune_vmapped,
+    fold_channel_salience,
+    grad_mask,
+    prune_plan,
+    pruned_fraction,
+    remap_plan,
+    remap_plan_device,
+    retrain,
+    unrepaired_fault_columns,
+    weight_salience,
+)
+
+ROWS = COLS = 8
+
+
+def _hyca(mode: str, dppu: int = 4) -> HyCAConfig:
+    return HyCAConfig(
+        rows=ROWS, cols=COLS, dppu=DPPUConfig(size=dppu, group_size=min(8, dppu)),
+        mode=mode,
+    )
+
+
+def _state(n_faults: int, seed: int, visible: bool = True,
+           pad_to: int | None = None) -> FaultState:
+    rng = np.random.default_rng(seed)
+    fmap = np.zeros((ROWS, COLS), bool)
+    idx = rng.choice(ROWS * COLS, size=n_faults, replace=False)
+    fmap.reshape(-1)[idx] = True
+    st = fault_state_from_map(fmap, max_faults=pad_to or max(n_faults, 1), rng=rng)
+    if visible:
+        st = dataclasses.replace(
+            st,
+            stuck_bit=jnp.full(st.max_faults, 30, jnp.int32),
+            stuck_val=jnp.ones(st.max_faults, jnp.int32),
+        )
+    return st
+
+
+def _bits(a):
+    a = np.asarray(a)
+    return a.view(np.int32) if a.dtype == np.float32 else a
+
+
+# --------------------------------------------------------------------------- #
+# planner
+# --------------------------------------------------------------------------- #
+def test_remap_plan_victims_are_least_salient(rng):
+    cfg = _hyca("protected")
+    for seed in range(12):
+        st = _state(int(rng.integers(0, 14)), seed=seed)
+        sal = np.random.default_rng(seed).random(COLS)
+        plan = remap_plan(st, cfg, sal)
+        cm = np.asarray(plan.col_map)
+        assert np.array_equal(np.sort(cm), np.arange(COLS))  # permutation
+        broken = unrepaired_fault_columns(st, cfg)
+        k = broken.size
+        victims = np.nonzero(np.isin(cm, broken))[0]
+        assert set(victims) == set(np.argsort(sal, kind="stable")[:k])
+        # classes on healthy columns keep identity wherever possible:
+        # at most 2k entries move (one swap per misplaced victim)
+        assert (cm != np.arange(COLS)).sum() <= 2 * k
+
+
+def test_remap_plan_device_matches_host(rng):
+    cfg = _hyca("protected")
+    for seed in range(25):
+        r = np.random.default_rng(seed)
+        st = _state(int(r.integers(0, 20)), seed=seed, pad_to=20)
+        sal = r.random(COLS)
+        host = remap_plan(st, cfg, sal)
+        dev = remap_plan_device(st.fpt, jnp.asarray(sal), rows=ROWS, cols=COLS,
+                                capacity=cfg.capacity)
+        np.testing.assert_array_equal(np.asarray(host.col_map), np.asarray(dev.col_map))
+
+
+def test_under_capacity_plan_is_identity(rng):
+    cfg = _hyca("protected")
+    st = _state(cfg.capacity, seed=1)  # exactly at capacity: all repaired
+    plan = remap_plan(st, cfg, rng.random(COLS))
+    np.testing.assert_array_equal(np.asarray(plan.col_map), np.arange(COLS))
+    assert pruned_fraction(st, cfg) == 0.0
+
+
+def test_bad_plan_rejected(rng):
+    cfg = _hyca("protected")
+    st = _state(2, seed=0)
+    bad = RepairPlan(jnp.zeros(COLS, jnp.int32), jnp.zeros(COLS, bool))
+    x = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    with pytest.raises(ValueError, match="permutation"):
+        hyca_matmul(x, x, st, cfg=cfg, plan=bad)
+    with pytest.raises(ValueError, match="permutation"):
+        build_ftcontext(st, cfg, plan=bad)
+    bad_prune = RepairPlan(jnp.arange(COLS, dtype=jnp.int32), jnp.zeros((), bool))
+    with pytest.raises(ValueError, match="PE mask"):
+        hyca_matmul(x, x, st, cfg=cfg, plan=bad_prune)
+    with pytest.raises(ValueError, match=f"\\({COLS},\\)"):
+        remap_plan(st, cfg, np.ones(COLS + 1))
+
+
+# --------------------------------------------------------------------------- #
+# engine semantics
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["protected", "unprotected"])
+def test_identity_plan_bitexact_with_no_plan(mode, rng):
+    """The acceptance invariant: remap with an identity plan is bit-exact
+    with the existing protected path — including OVER capacity, where the
+    unrepaired corruption must be byte-for-byte identical."""
+    cfg = _hyca(mode)
+    st = _state(10, seed=3)  # 10 > capacity 4
+    x = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, COLS)), jnp.float32)
+    base = hyca_matmul(x, w, st, cfg=cfg)
+    ident = hyca_matmul(x, w, st, cfg=cfg, plan=identity_plan(ROWS, COLS))
+    assert np.array_equal(_bits(base), _bits(ident))
+    # int8 datapath too
+    xi = jnp.asarray(rng.integers(-10, 10, (8, 16)), jnp.int8)
+    wi = jnp.asarray(rng.integers(-10, 10, (16, COLS)), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(hyca_matmul(xi, wi, st, cfg=cfg)),
+        np.asarray(hyca_matmul(xi, wi, st, cfg=cfg, plan=identity_plan(ROWS, COLS))),
+    )
+
+
+def test_prune_zeroes_exactly_sacrificed_pes(rng):
+    """Pruning is plan INTENT: exactly the output positions produced by the
+    plan's sacrificed PEs (the confirmed over-capacity FPT entries) are
+    zero; everything else is bit-exact with the DPPU-repaired output.
+    Faults the plan has never seen are NOT silently zeroed — software can
+    only prune what it planned to."""
+    cfg = _hyca("protected")
+    st = _state(10, seed=5)
+    plan = prune_plan(st, cfg)
+    pr = np.asarray(plan.prune)
+    broken = unrepaired_fault_columns(st, cfg)
+    np.testing.assert_array_equal(np.unique(np.nonzero(pr)[1]), broken)
+    fpt = np.asarray(st.fpt)
+    expect = {(int(r), int(c)) for r, c in fpt[cfg.capacity:] if r >= 0}
+    assert {(int(r), int(c)) for r, c in np.argwhere(pr)} == expect
+    x = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, COLS)), jnp.float32)
+    clean = np.asarray(jnp.matmul(x, w, preferred_element_type=jnp.float32))
+    out = np.asarray(hyca_matmul(x, w, st, cfg=cfg, plan=plan))
+    mi = np.arange(16)[:, None] % ROWS
+    ni = np.arange(COLS)[None, :] % COLS
+    pruned_pos = pr[mi, ni]  # identity col_map
+    assert np.all(out[pruned_pos] == 0.0)
+    np.testing.assert_array_equal(out[~pruned_pos], clean[~pruned_pos])
+    # plan intent only: a fault the plan has never seen still corrupts
+    st_new = _state(12, seed=11, pad_to=12)
+    out_blind = np.asarray(hyca_matmul(x, w, st_new, cfg=cfg, plan=plan))
+    unplanned = (out_blind != clean) & ~pruned_pos
+    assert unplanned.any()
+    assert not np.all(out_blind[unplanned] == 0.0)
+
+
+def test_remap_routes_corruption_to_chosen_classes(rng):
+    """A swap plan moves the corruption: class v (mapped onto the broken
+    column) corrupts; the class that used to live there is clean."""
+    cfg = _hyca("unprotected", dppu=0)
+    fmap = np.zeros((ROWS, COLS), bool)
+    fmap[2, 5] = True  # one faulty PE in column 5
+    st = dataclasses.replace(
+        fault_state_from_map(fmap, max_faults=1),
+        stuck_bit=jnp.asarray([30], jnp.int32), stuck_val=jnp.asarray([1], jnp.int32),
+    )
+    perm = np.arange(COLS, dtype=np.int32)
+    perm[[1, 5]] = perm[[5, 1]]  # class 1 -> PE col 5, class 5 -> PE col 1
+    plan = RepairPlan(jnp.asarray(perm), jnp.zeros((ROWS, COLS), bool))
+    x = jnp.asarray(rng.standard_normal((ROWS, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, COLS)), jnp.float32)
+    clean = np.asarray(jnp.matmul(x, w, preferred_element_type=jnp.float32))
+    out = np.asarray(hyca_matmul(x, w, st, cfg=cfg, plan=plan))
+    assert out[2, 1] != clean[2, 1]      # class 1 now sits on the faulty PE
+    assert out[2, 5] == clean[2, 5]      # class 5 escaped to healthy col 1
+    assert np.array_equal(np.delete(out, [1], axis=1)[2], np.delete(clean, [1], axis=1)[2])
+
+
+def test_ftcontext_no_retrace_on_plan_swap(rng):
+    """à la test_ftcontext: identity -> remap+prune is a leaf-only change."""
+    cfg = _hyca("protected")
+    traces = []
+
+    @jax.jit
+    def f(ftc, x, w):
+        traces.append(1)
+        return ftc.matmul(x, w, site="ffn")
+
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, COLS)), jnp.float32)
+    st = _state(10, seed=3)
+    base = build_ftcontext(st, cfg, plan=identity_plan(ROWS, COLS))
+    f(base, x, w)
+    real = remap_plan(st, cfg, np.arange(COLS, dtype=np.float64))
+    f(base.with_plan(real), x, w)                       # new plan values
+    f(base.with_state(_state(6, seed=9, pad_to=10)), x, w)  # new fault values
+    assert len(traces) == 1
+    f(dataclasses.replace(base, plan=None), x, w)       # structure change
+    assert len(traces) == 2
+
+
+def test_fused_ref_dispatch_matches_twopass_with_plan(rng):
+    cfg = _hyca("protected")
+    st = _state(9, seed=7)
+    plan = remap_plan(st, cfg, np.random.default_rng(0).random(COLS))
+    x = jnp.asarray(rng.standard_normal((32, 24)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    two = build_ftcontext(st, cfg, dispatch="twopass", plan=plan)
+    fused = build_ftcontext(st, cfg, dispatch="fused", plan=plan)
+    assert fused.fused_backend == "ref"
+    assert np.array_equal(
+        _bits(two.matmul(x, w, site="ffn")), _bits(fused.matmul(x, w, site="ffn"))
+    )
+
+
+def test_fused_kernel_interpret_with_plan_matches_twopass(rng):
+    """The Pallas kernel path consumes permuted grids + post-kernel prune."""
+    cfg = _hyca("protected")
+    st = _state(9, seed=7)
+    plan = remap_plan(st, cfg, np.random.default_rng(0).random(COLS))
+    x = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    ftc = dataclasses.replace(
+        build_ftcontext(st, cfg, dispatch="fused", plan=plan),
+        fused_backend="interpret",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ftc.matmul(x, w, site="ffn")),
+        np.asarray(hyca_matmul(x, w, st, cfg=cfg, plan=plan)),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# salience
+# --------------------------------------------------------------------------- #
+def test_fold_and_weight_salience_shapes():
+    s = fold_channel_salience(np.arange(10.0), 4)
+    # class c owns channels c, c+4, c+8
+    np.testing.assert_allclose(s, [0 + 4 + 8, 1 + 5 + 9, 2 + 6, 3 + 7])
+    params = {"a": jnp.ones((3, 8)), "b": {"w": jnp.ones((2, 5, 8))}, "scale": jnp.ones(8)}
+    ws = weight_salience(params, 4)
+    assert ws.shape == (4,) and (ws > 0).all()
+
+
+def test_salience_probe_records_sites(rng):
+    probe = SalienceProbe(cols=COLS)
+    x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 24)), jnp.float32)
+    probe.matmul(x, w, site="ffn")
+    probe.matmul(x, w, site="attn.qkv")
+    assert probe.salience("ffn").shape == (COLS,)
+    assert set(probe.site_salience()) == {"ffn", "attn.qkv"}
+    assert probe.salience().shape == (COLS,)
+    with pytest.raises(ValueError, match="unknown site"):
+        probe.matmul(x, w, site="bogus")
+
+
+# --------------------------------------------------------------------------- #
+# remap/prune recovery (fast, deterministic direction check)
+# --------------------------------------------------------------------------- #
+def test_remap_prune_beats_protected_over_capacity(rng):
+    cfg_p = _hyca("protected")
+    x = jnp.asarray(rng.integers(-8, 8, (16, 32)), jnp.int8)
+    w = jnp.asarray(rng.integers(-8, 8, (32, COLS)), jnp.int8)
+    clean = np.asarray(jnp.matmul(x, w, preferred_element_type=jnp.int32), np.float64)
+    maps = random_fault_maps(rng, 32, ROWS, COLS, 0.15)
+    states = cp.batched_fault_states(maps, seed=2)
+    sal = jnp.asarray(np.abs(clean).mean(axis=0))
+    plans = cp.batched_repair_plans(states, sal, rows=ROWS, cols=COLS, capacity=cfg_p.capacity)
+    out_p = np.asarray(jax.jit(jax.vmap(
+        lambda s: hyca_matmul(x, w, s, cfg=cfg_p)))(states), np.float64)
+    out_r = np.asarray(jax.jit(jax.vmap(
+        lambda s, pl: hyca_matmul(x, w, s, cfg=cfg_p, plan=pl)))(states, plans), np.float64)
+    err_p = np.abs(out_p - clean).mean()
+    err_r = np.abs(out_r - clean).mean()
+    assert err_r < err_p  # pruned zeros beat stuck-at garbage on average
+
+
+# --------------------------------------------------------------------------- #
+# retrain
+# --------------------------------------------------------------------------- #
+def test_grad_mask_freezes_and_layer_range():
+    import jax.tree_util as jtu
+
+    params = {
+        "blocks": {"ffn": {"up": jnp.ones((4, 8, 16))}, "ln": jnp.ones((4, 8))},
+        "embed": jnp.ones((32, 8)),
+    }
+    rc = RetrainConfig(trainable=("ffn",), layer_range=(1, 3))
+    mask = grad_mask(params, rc)
+    m = np.asarray(mask["blocks"]["ffn"]["up"]).ravel()
+    np.testing.assert_array_equal(m, [0.0, 1.0, 1.0, 0.0])
+    assert float(np.asarray(mask["blocks"]["ln"]).max()) == 0.0
+    assert float(np.asarray(mask["embed"]).max()) == 0.0
+    assert all(
+        np.asarray(l).ndim == np.asarray(p).ndim
+        for l, p in zip(jtu.tree_leaves(mask), jtu.tree_leaves(params))
+    )
+
+
+@pytest.mark.slow
+def test_retrain_freezes_untrainable_and_reduces_loss():
+    from repro.configs import get_smoke_config
+    from repro.models.lm import init_params
+
+    lm = dataclasses.replace(get_smoke_config("qwen1.5-0.5b"), dtype=jnp.float32)
+    params = init_params(jax.random.key(0), lm)
+    cfg = _hyca("protected")
+    st = _state(10, seed=1, pad_to=16)
+    plan = remap_plan(st, cfg, weight_salience(params, COLS))
+    rc = RetrainConfig(steps=6, lr=2e-3, batch=4, seq_len=16, trainable=("ffn",))
+    new_params, report = retrain(params, lm, hyca=cfg, state=st, plan=plan, rc=rc)
+    # warmup=1: step 0 runs at lr 0, so the loss pair is measured at steps 1+
+    assert report["losses"][-1] < report["losses"][1]
+    import jax.tree_util as jtu
+
+    new_flat = dict(
+        ("/".join(str(getattr(k, "key", k)) for k in path), leaf)
+        for path, leaf in jtu.tree_flatten_with_path(new_params)[0]
+    )
+    for path, leaf in jtu.tree_flatten_with_path(params)[0]:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        same = np.array_equal(np.asarray(leaf), np.asarray(new_flat[name]))
+        assert same != ("ffn" in name), name  # ffn moved, everything else frozen
+
+
+# --------------------------------------------------------------------------- #
+# serving lifecycle
+# --------------------------------------------------------------------------- #
+def _served_cfg(**kw):
+    from repro.serving import ServerConfig
+
+    base = dict(mode="protected", rows=ROWS, cols=COLS, dppu_size=2,
+                n_slots=4, smax=32, seed=0)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def test_server_remap_keeps_full_capacity():
+    from repro.serving import REMAPPED, FaultTolerantServer
+
+    srv = FaultTolerantServer(_served_cfg(repair="remap"))
+    srv.injector.inject_n(6)  # > dppu capacity 2
+    srv.manager.bist()
+    assert srv.manager.counts()[REMAPPED] > 0
+    assert srv.manager.capacity_fraction == 1.0
+    assert srv.manager.quality_fraction < 1.0
+    for _ in range(3):
+        srv.submit([1, 2, 3], max_new_tokens=4)
+    out = srv.run(max_steps=32)
+    assert out["effective_slots_final"] == 4
+    assert out["remapped_final"] == srv.manager.n_remapped > 0
+    assert out["requests_completed"] == 3
+    assert srv.repair_events and srv.repair_events[0]["mode"] == "remap"
+    # baseline: identical faults without repair degrade admission
+    srv2 = FaultTolerantServer(_served_cfg())
+    srv2.injector.inject_map(srv.injector.fault_map)
+    srv2.manager.bist()
+    assert srv2.manager.capacity_fraction < 1.0
+
+
+def test_server_remap_budget_overflow_retires():
+    from repro.serving import FaultTolerantServer
+
+    srv = FaultTolerantServer(_served_cfg(repair="remap", max_remap_fraction=0.25))
+    srv.injector.inject_n(30)  # broken columns far beyond the 2-col budget
+    srv.manager.bist()
+    assert len(srv.manager.remapped_cols) <= 2  # floor(0.25 * 8)
+    assert srv.manager.retired_coords()        # overflow past budget retires
+    assert srv.manager.surviving_cols < COLS
+    # the DEPLOYED plan respects the budget: only the REMAPPED columns carry
+    # pruned PEs — retired columns are discarded, not pruned, so the plan
+    # and quality_fraction agree about the sacrifice set
+    srv._maybe_repair()
+    pruned_cols = set(np.nonzero(np.asarray(srv.plan.prune).any(axis=0))[0])
+    assert pruned_cols == set(srv.manager.remapped_cols)
+    assert srv.manager.quality_fraction == 1.0 - len(pruned_cols) / COLS
+
+
+def test_server_retrain_swaps_repaired_params():
+    from repro.serving import FaultTolerantServer
+
+    srv = FaultTolerantServer(_served_cfg(repair="retrain", retrain_steps=2, n_slots=2))
+    before = srv.params
+    srv.injector.inject_n(5)
+    srv.manager.bist()
+    srv.submit([1, 2, 3], max_new_tokens=3)
+    srv.run(max_steps=16)
+    assert srv.repair_events and srv.repair_events[0]["retrained"]
+    assert srv.params is not before             # repaired params swapped in
+    assert srv.bundle.params is before          # fleet siblings untouched
+
+
+def test_remapped_faults_really_corrupt_without_plan():
+    """Regression pin for the no-double-repair invariant: the serving engine
+    runs mode="unprotected", so a REMAPPED fault left in the served state is
+    NOT silently absorbed by the engine's DPPU repair window — defuse the
+    plan and its corruption reaches the sampled tokens."""
+    from repro.serving import FaultTolerantServer
+
+    trace = [{"step": 0, "prompt": [1, 2, 3], "max_new_tokens": 6}]
+    ref = FaultTolerantServer(_served_cfg(mode="off"))
+    ref.run(list(trace), max_steps=24)
+    tok_ref = ref.completions_by_rid()[0]
+
+    srv = FaultTolerantServer(_served_cfg(repair="remap", dppu_size=1, bist=False))
+    for i, (r, c) in enumerate([(0, 2), (1, 4), (0, 5), (1, 6)]):
+        srv.injector.inject_at(r, c, bit=30, val=1)  # visible stuck-at-1
+    srv.manager.bist()
+    assert srv.manager.n_remapped >= 2
+    srv._maybe_repair()                       # hook fires, sets its key...
+    srv.apply_repair(plan=srv.bundle.identity_plan)  # ...then defuse the plan
+    srv.run(list(trace), max_steps=24)
+    tok_bad = srv.completions_by_rid()[0]
+    # remapped faults stay corrupting when nothing prunes them — if the
+    # engine were repairing them, these streams would be identical
+    assert not np.array_equal(tok_ref, tok_bad)
+
+
+def test_chaos_injection_composes_with_repair():
+    """PR-4 chaos hook + PR-5 repair: a chaos burst past DPPU capacity is
+    detected by the ScanEngine, remapped by the repair hook, and the replica
+    keeps serving at full admission capacity."""
+    from repro.core.campaign import ChaosSpec, apply_chaos, chaos_maps
+    from repro.serving import FaultTolerantServer
+
+    cfg = _served_cfg(repair="remap", bist=False, scan_block=4, confirm_hits=1,
+                      max_remap_fraction=1.0)
+    srv = FaultTolerantServer(cfg)
+    chaos = ChaosSpec(per=0.12, at_step=1, seed=5)
+    cmap = chaos_maps(chaos, 1, ROWS, COLS)[0]
+    assert cmap.sum() > cfg.dppu_size
+
+    def hook(s):
+        if s.step_idx == chaos.at_step:
+            apply_chaos(s.injector, cmap)
+
+    srv.submit([1, 2, 3], max_new_tokens=24)
+    srv.run([], max_steps=48, on_step=hook)
+    assert srv.manager.n_confirmed == int(cmap.sum())   # ScanEngine found all
+    assert srv.manager.n_remapped > 0                    # repair hook fired
+    assert srv.manager.capacity_fraction == 1.0
+    assert srv.repair_events
+
+
+# --------------------------------------------------------------------------- #
+# campaign repair mode — vmapped == reference, batched plans
+# --------------------------------------------------------------------------- #
+def test_campaign_remap_vmapped_equals_reference(rng):
+    n = 200
+    maps = rng.random((n, 16, 16)) < rng.uniform(0.0, 0.2, size=(n, 1, 1))
+    caps = rng.integers(0, 18, size=n).astype(np.int32)
+    ref = [hyca_remap_repair(maps[i], int(caps[i])) for i in range(n)]
+    ff, surv = cp.evaluate_batched(
+        jnp.asarray(maps), jnp.asarray(caps), scheme="HyCA", repair="remap"
+    )
+    np.testing.assert_array_equal(np.asarray(ff), [r[0] for r in ref])
+    np.testing.assert_array_equal(np.asarray(surv), [r[1] for r in ref])
+    # ff matches the no-repair scheme (remap adds no repair capacity)
+    ff0, surv0 = cp.evaluate_batched(jnp.asarray(maps), jnp.asarray(caps), scheme="HyCA")
+    np.testing.assert_array_equal(np.asarray(ff), np.asarray(ff0))
+    assert (np.asarray(surv) >= np.asarray(surv0)).all()
+    # and the numpy references agree on fully-functional configs
+    for i in range(0, n, 17):
+        assert hyca_remap_repair(maps[i], int(caps[i]))[0] == hyca_repair(maps[i], int(caps[i]))[0]
+
+
+def test_batched_repair_plans_match_per_config(rng):
+    cfg = _hyca("protected")
+    maps = random_fault_maps(rng, 24, ROWS, COLS, 0.12)
+    states = cp.batched_fault_states(maps, seed=4)
+    sal = np.random.default_rng(1).random(COLS)
+    plans = cp.batched_repair_plans(
+        states, jnp.asarray(sal), rows=ROWS, cols=COLS, capacity=cfg.capacity
+    )
+    assert plans.col_map.shape == (24, COLS)
+    for i in range(24):
+        one = remap_plan(cp.take_config(states, i), cfg, sal)
+        np.testing.assert_array_equal(
+            np.asarray(plans.col_map[i]), np.asarray(one.col_map), err_msg=str(i)
+        )
+
+
+def test_identity_plans_are_noop_batch(rng):
+    plans = cp.identity_plans(5, ROWS, COLS)
+    assert plans.col_map.shape == (5, COLS)
+    st = _state(10, seed=3, pad_to=12)
+    states = jax.tree.map(lambda l: jnp.broadcast_to(l, (5,) + l.shape), st)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, COLS)), jnp.float32)
+    cfg = _hyca("protected")
+    out = jax.vmap(lambda s, p: hyca_matmul(x, w, s, cfg=cfg, plan=p))(states, plans)
+    base = hyca_matmul(x, w, st, cfg=cfg)
+    for i in range(5):
+        assert np.array_equal(_bits(out[i]), _bits(base))
+
+
+# --------------------------------------------------------------------------- #
+# golden-stats acceptance (campaign-stats CI job): the flattened cliff
+# --------------------------------------------------------------------------- #
+GOLDEN_ROWS = GOLDEN_COLS = 16
+GOLDEN_PER = 0.10          # past the 8/256 capacity cliff (E[faults] ~ 25.6)
+GOLDEN_N_CFG = 48
+
+
+def _golden_mlp():
+    """Deterministic 2-layer MLP (32 -> 32 -> 16 classes) whose hidden matmul
+    runs on the virtual array; trained clean to ~1.0 accuracy."""
+    rng = np.random.default_rng(0)
+    C, D, H = 16, 32, 32
+    centers = rng.standard_normal((C, D)) * 1.2
+    def make(n):
+        y = rng.integers(0, C, n)
+        return (centers[y] + 0.9 * rng.standard_normal((n, D))).astype(np.float32), y.astype(np.int32)
+    xtr, ytr = make(4096)
+    xte, yte = make(512)
+    k1, k2 = jax.random.split(jax.random.key(0))
+    params = {"w1": jax.random.normal(k1, (D, H)) * 0.3,
+              "w2": jax.random.normal(k2, (H, C)) * 0.3}
+
+    def fwd(p, x, state=None, plan=None, cfg=None):
+        h = x @ p["w1"] if state is None else hyca_matmul(x, p["w1"], state, cfg=cfg, plan=plan)
+        return jnp.maximum(h, 0.0) @ p["w2"]
+
+    def loss(p, x, y, state=None, plan=None, cfg=None):
+        lg = fwd(p, x, state, plan, cfg)
+        return -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(y.size), y])
+
+    xj, yj = jnp.asarray(xtr), jnp.asarray(ytr)
+
+    @jax.jit
+    def step(p):
+        g = jax.grad(lambda q: loss(q, xj, yj))(p)
+        return jax.tree.map(lambda a, b: a - 0.4 * b, p, g)
+
+    for _ in range(400):
+        params = step(params)
+    return params, fwd, loss, (xtr, ytr, xte, yte)
+
+
+@pytest.mark.campaign_stats
+@pytest.mark.slow
+def test_golden_repair_flattens_capacity_cliff(rng):
+    """THE acceptance witness: at PER past the cliff, protected+remap and
+    protected+retrain accuracy beat protected-only — within the campaign's
+    own CIs — and remediation holds accuracy near clean where the paper's
+    architecture has none left."""
+    cfg_p = HyCAConfig(rows=GOLDEN_ROWS, cols=GOLDEN_COLS,
+                       dppu=DPPUConfig(size=8, group_size=8), mode="protected")
+    cfg_u = dataclasses.replace(cfg_p, mode="unprotected")
+    assert cfg_p.capacity == 8
+    params, fwd, loss, (xtr, ytr, xte, yte) = _golden_mlp()
+    clean_acc = float((np.argmax(np.asarray(fwd(params, jnp.asarray(xte))), -1) == yte).mean())
+    assert clean_acc >= 0.95
+
+    maps = random_fault_maps(np.random.default_rng(42), GOLDEN_N_CFG,
+                             GOLDEN_ROWS, GOLDEN_COLS, GOLDEN_PER)
+    states = cp.batched_fault_states(maps, seed=7)
+    states = dataclasses.replace(  # visible stuck-at-1 on the exponent
+        states,
+        stuck_bit=jnp.where(states.fpt[..., 0] >= 0, 30, 0).astype(jnp.int32),
+        stuck_val=jnp.where(states.fpt[..., 0] >= 0, 1, 0).astype(jnp.int32),
+    )
+    sal = jnp.asarray(fold_channel_salience(
+        np.linalg.norm(np.asarray(params["w1"]), axis=0), GOLDEN_COLS))
+    plans = cp.batched_repair_plans(states, sal, rows=GOLDEN_ROWS, cols=GOLDEN_COLS,
+                                    capacity=cfg_p.capacity)
+    idplans = cp.identity_plans(GOLDEN_N_CFG, GOLDEN_ROWS, GOLDEN_COLS)
+
+    xt, yt = jnp.asarray(xte), jnp.asarray(yte)
+
+    def acc_one(p, state, plan, cfg):
+        return (jnp.argmax(fwd(p, xt, state, plan, cfg), -1) == yt).mean()
+
+    acc_u = np.asarray(jax.jit(jax.vmap(
+        lambda s, pl: acc_one(params, s, pl, cfg_u)))(states, idplans))
+    acc_p = np.asarray(jax.jit(jax.vmap(
+        lambda s, pl: acc_one(params, s, pl, cfg_p)))(states, idplans))
+    acc_r = np.asarray(jax.jit(jax.vmap(
+        lambda s, pl: acc_one(params, s, pl, cfg_p)))(states, plans))
+    xj, yj = jnp.asarray(xtr[:1024]), jnp.asarray(ytr[:1024])
+    tuned = finetune_vmapped(
+        lambda p, s, pl: loss(p, xj, yj, s, pl, cfg_p),
+        params, states, plans, steps=60, lr=0.3,
+    )
+    acc_t = np.asarray(jax.jit(jax.vmap(
+        lambda p, s, pl: acc_one(p, s, pl, cfg_p)))(tuned, states, plans))
+
+    ci = {k: cp.mean_halfwidth(v) for k, v in
+          {"u": acc_u, "p": acc_p, "r": acc_r, "t": acc_t}.items()}
+    # protection alone already collapsed past the cliff...
+    assert acc_p.mean() < clean_acc - 0.25
+    # ...remap+prune flattens it: big, CI-robust margin over protected-only
+    assert acc_r.mean() - ci["r"] > acc_p.mean() + ci["p"] + 0.15
+    # ...and retrain recovers further still (at least remap, within CI, and
+    # decisively above protected-only)
+    assert acc_t.mean() >= acc_r.mean() - ci["r"] - ci["t"]
+    assert acc_t.mean() - ci["t"] > acc_p.mean() + ci["p"] + 0.15
+    # remediation holds near-clean accuracy at 3x the capacity in faults
+    assert acc_r.mean() > clean_acc - 0.10
+    assert acc_t.mean() > clean_acc - 0.05
+    # protected still beats unprotected (the DPPU is not vacuous here)
+    assert acc_p.mean() + ci["p"] + ci["u"] >= acc_u.mean()
+
+
+@pytest.mark.campaign_stats
+@pytest.mark.slow
+def test_golden_remap_remaining_power_dominates():
+    """Campaign-level witness: with ``repair="remap"`` the HyCA remaining-
+    power curve dominates column discard at every operating point, with a
+    CI-robust gap past the cliff — and FFP is bit-identical (remap adds no
+    repair capacity)."""
+    pers = (0.01, 0.04, 0.08)
+    base = cp.CampaignSpec(rows=32, cols=32, n_configs=1000,
+                           dppu=DPPUConfig(size=32), seed=0, schemes=("HyCA",))
+    run_none = cp.run_campaign(base, pers)
+    run_remap = cp.run_campaign(dataclasses.replace(base, repair="remap"), pers)
+    for per in pers:
+        a = run_none.get("HyCA", per)
+        b = run_remap.get("HyCA", per)
+        assert a.fully_functional_prob == b.fully_functional_prob, per
+        assert b.remaining_power >= a.remaining_power, per
+    # past the cliff the flattening is decisive, not a tie inside noise
+    a = run_none.get("HyCA", 0.08)
+    b = run_remap.get("HyCA", 0.08)
+    assert b.remaining_power - b.remaining_power_ci95 > \
+        a.remaining_power + a.remaining_power_ci95
