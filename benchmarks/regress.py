@@ -1,0 +1,149 @@
+"""Benchmark regression gate: diff a bench run against committed baselines.
+
+The committed ``experiments/bench/*.json`` artifacts double as performance
+baselines.  Each :class:`Budget` names one metric in one benchmark file, how
+its records are keyed (so baseline and current rows pair up even when the
+sweep order changes), and a ``max_ratio`` tolerance: current/baseline above
+it is a regression.  Ratios, not absolute deltas — the committed numbers
+come from whatever machine ran them, and CI runners differ; a tolerance of
+1.6 means "no more than 60% slower than the committed run", generous enough
+for machine-to-machine noise, tight enough to flag a 2x regression
+(asserted in tests/test_obs.py).
+
+Usage (the CI ``obs-smoke`` lane runs this warn-only):
+
+    REPRO_BENCH_DIR=/tmp/bench python benchmarks/ft_overhead.py --quick
+    python benchmarks/regress.py --current /tmp/bench --warn-only
+
+Run with no arguments it diffs the committed baselines against themselves
+(every ratio 1.0 — a self-test that the budget wiring matches the files).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """One gated metric: ``records[*][metric]`` in ``<dir>/<bench>.json``,
+    rows matched across runs by the ``key`` fields, failing when
+    current/baseline > ``max_ratio``."""
+
+    bench: str                       # file stem under the bench dir
+    metric: str                      # numeric field in each record
+    max_ratio: float                 # current/baseline ceiling
+    key: tuple[str, ...] = ("arch",)  # record-identity fields
+    records: str = "results"         # list field holding the records
+
+
+# Wall-clock overhead metrics gate loosely (1.6x: CI machine noise); the
+# ratio-of-ratios nature of *_overhead_x already divides out most machine
+# speed, so 1.6 is genuinely slack for them.  step_ms is raw wall time on a
+# tiny probe — noisiest, widest budget.
+BUDGETS: tuple[Budget, ...] = (
+    Budget("ft_overhead", "twopass_overhead_x", 1.6),
+    Budget("ft_overhead", "fused_overhead_x", 1.6),
+    Budget("scan_latency", "step_ms", 2.5, key=("rows", "cols", "scan_block")),
+    Budget("scan_latency", "boot_batched_ms", 2.5, key=("rows", "cols", "scan_block")),
+)
+
+
+def _load(path: str) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _index(payload: dict, budget: Budget) -> dict[tuple, dict]:
+    out: dict[tuple, dict] = {}
+    for rec in payload.get(budget.records, []):
+        out[tuple(rec.get(k) for k in budget.key)] = rec
+    return out
+
+
+def diff_benchmarks(baseline_dir: str, current_dir: str,
+                    budgets: tuple[Budget, ...] = BUDGETS) -> dict:
+    """Diff every budgeted metric between two bench directories.
+
+    Returns ``{"rows": [...], "notes": [...], "ok": bool}``.  A row is one
+    (bench, metric, key) comparison with its ratio and verdict; notes record
+    skips (missing file / record / metric / zero baseline) — skips never
+    fail the gate, only measured regressions do.
+    """
+    rows: list[dict] = []
+    notes: list[str] = []
+    for b in budgets:
+        base = _load(os.path.join(baseline_dir, f"{b.bench}.json"))
+        cur = _load(os.path.join(current_dir, f"{b.bench}.json"))
+        if base is None:
+            notes.append(f"{b.bench}.json: no committed baseline — skipped")
+            continue
+        if cur is None:
+            notes.append(f"{b.bench}.json: not in current run — skipped")
+            continue
+        base_idx = _index(base, b)
+        for key, crec in _index(cur, b).items():
+            brec = base_idx.get(key)
+            label = f"{b.bench}:{b.metric}[{','.join(map(str, key))}]"
+            if brec is None:
+                notes.append(f"{label}: no baseline record — skipped")
+                continue
+            bval, cval = brec.get(b.metric), crec.get(b.metric)
+            if not isinstance(bval, (int, float)) or not isinstance(cval, (int, float)):
+                notes.append(f"{label}: metric missing — skipped")
+                continue
+            if bval <= 0:
+                notes.append(f"{label}: non-positive baseline {bval} — skipped")
+                continue
+            ratio = cval / bval
+            rows.append({
+                "bench": b.bench, "metric": b.metric,
+                "key": dict(zip(b.key, key)),
+                "baseline": bval, "current": cval,
+                "ratio": round(ratio, 3), "max_ratio": b.max_ratio,
+                "ok": ratio <= b.max_ratio,
+            })
+    return {"rows": rows, "notes": notes, "ok": all(r["ok"] for r in rows)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="experiments/bench",
+                    help="committed baseline dir (default: experiments/bench)")
+    ap.add_argument("--current", default=None,
+                    help="bench dir to gate (default: the baseline itself — "
+                         "a wiring self-test)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (the CI smoke lane)")
+    ap.add_argument("--json", action="store_true", help="emit the diff as JSON")
+    args = ap.parse_args(argv)
+
+    current = args.current or args.baseline
+    out = diff_benchmarks(args.baseline, current)
+    if args.json:
+        print(json.dumps(out, indent=1))
+    else:
+        for note in out["notes"]:
+            print(f"[regress] note: {note}")
+        for r in out["rows"]:
+            keystr = ",".join(f"{k}={v}" for k, v in r["key"].items())
+            status = "ok  " if r["ok"] else "FAIL"
+            print(f"[regress] {status} {r['bench']}:{r['metric']}[{keystr}] "
+                  f"{r['baseline']} -> {r['current']} "
+                  f"(x{r['ratio']}, budget x{r['max_ratio']})")
+        n_bad = sum(not r["ok"] for r in out["rows"])
+        verdict = "PASS" if out["ok"] else f"{n_bad} REGRESSION(S)"
+        print(f"[regress] {len(out['rows'])} comparisons, {len(out['notes'])} "
+              f"skipped: {verdict}" + (" (warn-only)" if args.warn_only and not out["ok"] else ""))
+    if not out["ok"] and not args.warn_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -423,6 +423,89 @@ def hyca_matmul(
     return _hyca_matmul_impl(x, w, state, plan, cfg=cfg, n_repair=n_repair)
 
 
+def _pe_multiplicity(m: int, n: int, rows: int, cols: int) -> np.ndarray:
+    """Static (rows, cols) grid: how many elements of an (m, n) output view
+    map onto each PE under the engine's out[i, j] -> PE(i % rows, j % cols)
+    mapping.  Host numpy — a compile-time constant under jit."""
+    ri = np.bincount(np.arange(m) % rows, minlength=rows)
+    ci = np.bincount(np.arange(n) % cols, minlength=cols)
+    return np.outer(ri, ci).astype(np.int32)
+
+
+def protected_view_stats(
+    state: FaultState | None,
+    cfg: HyCAConfig,
+    plan: RepairPlan | None,
+    m: int,
+    n: int,
+    *,
+    n_repair: int | None = None,
+) -> dict[str, jax.Array]:
+    """Element-exact fault accounting for one (m, n) protected output view.
+
+    Reduces the *same* grids, mode/capacity clamp, and plan gather that
+    :func:`hyca_matmul` applies to values down to int32 element counts —
+    the device side of the repro.obs counters (docs/observability.md).
+    Because each count depends only on (state, plan, geometry, m, n) — not
+    on the activations — the observability layer can compute it once per
+    step outside the model's layer scans and scale by call multiplicity,
+    leaving the decode graph untouched.
+
+    Returned counts (all int32 scalars, traced when state/plan are traced):
+
+      * ``total_elems``      — m·n, every element of the view;
+      * ``fault_elems``      — elements mapped onto faulty PEs;
+      * ``recomputed_elems`` — fault elements the DPPU overwrites (protected
+        mode, first ``capacity`` FPT entries — 0 in unprotected mode, which
+        is how the serving runtime models repair-by-exclusion);
+      * ``corrupted_elems``  — fault elements neither recomputed nor pruned:
+        what actually reaches the output corrupted;
+      * ``pruned_elems``     — elements the RepairPlan zeroes;
+      * ``fault_col_elems``  — elements in output channels whose PE column
+        carries an unhandled (corrupting) fault — the blast radius of the
+        column-level degradation story.
+    """
+    zero = jnp.zeros((), jnp.int32)
+    total = jnp.int32(m * n)
+    if cfg.mode == "off" or state is None:
+        return {
+            "total_elems": total, "fault_elems": zero, "recomputed_elems": zero,
+            "corrupted_elems": zero, "pruned_elems": zero, "fault_col_elems": zero,
+        }
+    _, _, faulty = _pe_grids(state, cfg.rows, cfg.cols)
+    if cfg.mode == "unprotected":
+        repaired = jnp.zeros((cfg.rows, cfg.cols), bool)
+    else:
+        # identical clamp to _hyca_matmul_impl: the DPPU can never repair
+        # more faults than it has capacity for
+        k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults, cfg.capacity)
+        repaired = repaired_grid(state, cfg.rows, cfg.cols, k)
+    if plan is not None:
+        cm = plan.col_map
+        faulty, repaired = faulty[:, cm], repaired[:, cm]
+        prune = plan.prune[:, cm]
+    else:
+        prune = jnp.zeros((cfg.rows, cfg.cols), bool)
+    mult = jnp.asarray(_pe_multiplicity(m, n, cfg.rows, cfg.cols))
+
+    def count(mask: jax.Array) -> jax.Array:
+        return jnp.sum(mult * mask.astype(jnp.int32)).astype(jnp.int32)
+
+    corrupting = faulty & ~repaired & ~prune
+    # channels (j values) per PE column — a column with a corrupting fault
+    # taints every element of every channel mapped onto it
+    chan = jnp.asarray(np.bincount(np.arange(n) % cfg.cols, minlength=cfg.cols).astype(np.int32))
+    bad_col = jnp.any(corrupting, axis=0)
+    return {
+        "total_elems": total,
+        "fault_elems": count(faulty),
+        "recomputed_elems": count(faulty & repaired),
+        "corrupted_elems": count(corrupting),
+        "pruned_elems": count(prune),
+        "fault_col_elems": (jnp.int32(m) * jnp.sum(chan * bad_col.astype(jnp.int32))).astype(jnp.int32),
+    }
+
+
 def surviving_columns(state: FaultState, cfg: HyCAConfig) -> int:
     """Column-prefix degradation when #faults > capacity (host-side helper)."""
     fpt = np.asarray(state.fpt)

@@ -124,17 +124,29 @@ class FTContext:
     # keys, like every other treedef change, recompile once when the plan
     # *structure* first appears).
     plan: object = None
+    # repro.obs: optional Counters pytree (traced leaf — counter value swaps
+    # never recompile) + the static call ledger accumulate() folds it over.
+    # The ledger is aux data: tuple of hashable SiteCall records, fixed per
+    # (model, shapes) at bundle build.
+    counters: object = None
+    ledger: tuple | None = None
+    # transient trace-time hook used by repro.obs.trace_site_calls to
+    # discover the call ledger; never part of the pytree (a callable is not
+    # hashable aux data and must not leak into jit keys)
+    _obs_record: object = dataclasses.field(default=None, repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     # pytree protocol
     # ------------------------------------------------------------------ #
     def tree_flatten(self):
-        aux = (self.hyca, self.policy, self.dispatch, self.fused_backend, self.fused_block)
-        return (self.state, self.plan), aux
+        aux = (self.hyca, self.policy, self.dispatch, self.fused_backend,
+               self.fused_block, self.ledger)
+        return (self.state, self.plan, self.counters), aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(leaves[0], *aux, plan=leaves[1])
+        return cls(leaves[0], *aux[:5], plan=leaves[1], counters=leaves[2],
+                   ledger=aux[5])
 
     # ------------------------------------------------------------------ #
     # static predicates
@@ -166,6 +178,37 @@ class FTContext:
         remediation is active) makes plan swaps leaf-only: zero recompiles."""
         return dataclasses.replace(self, plan=plan)
 
+    def with_counters(self, counters) -> "FTContext":
+        """Same static context, new repro.obs Counters (a traced leaf —
+        per-step counter carries never recompile)."""
+        return dataclasses.replace(self, counters=counters)
+
+    def with_ledger(self, ledger) -> "FTContext":
+        """Attach the static call ledger (repro.obs.trace_site_calls) that
+        ``accumulate`` folds the counters over.  Aux data: setting it (like
+        any static change) retraces once; it never changes per bundle."""
+        return dataclasses.replace(self, ledger=tuple(ledger))
+
+    def accumulate(self):
+        """One step's counter accumulation: fold every ledger entry's
+        element-exact engine stats (current state + plan) into ``counters``
+        and return the new Counters pytree.
+
+        Runs under jit next to the model forward, NOT inside it: the model's
+        layer stacks execute under ``lax.scan`` with this context closed
+        over, so in-graph per-call accumulation would leak inner tracers.
+        Per-call stats depend only on (state, plan, geometry, shape) — all
+        loop-invariant across the layer scan — so folding the static ledger
+        once per step is exact and leaves the decode graph untouched
+        (docs/observability.md)."""
+        if self.counters is None:
+            raise ValueError("accumulate() needs counters; use with_counters(Counters.zero())")
+        if self.ledger is None:
+            raise ValueError("accumulate() needs a call ledger; use with_ledger(trace_site_calls(...))")
+        from repro.obs.counters import ledger_stats  # deferred: obs imports engine
+
+        return ledger_stats(self.ledger, self.counters, self.state, self.plan, self.hyca)
+
     def _plan_for(self, site: str) -> RepairPlan | None:
         if self.plan is None or isinstance(self.plan, RepairPlan):
             return self.plan
@@ -182,6 +225,13 @@ class FTContext:
         so it lowers to the identical XLA dot as the unprotected path —
         required for the bit-exact protected==off invariant.
         """
+        if self._obs_record is not None:
+            protected = self.protects(site) and self.dispatch != "plain"
+            self._obs_record(
+                site=site, m=math.prod(x.shape[:-1]), n=int(w.shape[-1]),
+                count=1, dispatch=self.dispatch if protected else "plain",
+                protected=protected,
+            )
         if not self.protects(site):
             return jnp.matmul(x, w)
         plan = self._plan_for(site)
@@ -204,6 +254,13 @@ class FTContext:
         (the fused kernel covers plain 2-D projections; batched expert
         matmuls always use the engine until a batched kernel lands).
         """
+        if self._obs_record is not None:
+            protected = self.protects(site) and self.dispatch != "plain"
+            self._obs_record(
+                site=site, m=x.shape[0] * x.shape[2], n=int(w.shape[-1]),
+                count=x.shape[1], dispatch=self.dispatch if protected else "plain",
+                protected=protected,
+            )
         if not self.protects(site) or self.dispatch == "plain":
             return jnp.einsum(spec, x, w)
         if spec not in ("becd,edf->becf", "becf,efd->becd"):

@@ -108,6 +108,14 @@ def main(argv=None):
                     help="server step at which the chaos map is injected")
     ap.add_argument("--chaos-model", default="random", choices=["random", "clustered"],
                     help="fault distribution of the chaos map")
+    ap.add_argument("--counters", action="store_true",
+                    help="carry the repro.obs device-side Counters leaf through "
+                         "the compiled step (exact fault/recompute accounting; "
+                         "bit-exact with counters off)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the event log as JSONL to PATH and a "
+                         "Prometheus-style rendering of the summary to "
+                         "PATH.prom (docs/observability.md)")
     args = ap.parse_args(argv)
 
     cfg = ServerConfig(
@@ -116,6 +124,7 @@ def main(argv=None):
         protect_fraction=args.protect_fraction, dispatch=args.dispatch,
         scan_block=args.scan_block, fault_rate=args.fault_rate, seed=args.seed,
         repair=args.repair, retrain_steps=args.retrain_steps,
+        counters=args.counters,
     )
     server = FaultTolerantServer(cfg)
     if args.faults:
@@ -145,7 +154,9 @@ def main(argv=None):
 
         def on_step(srv):
             if srv.step_idx == chaos.at_step and chaos_state["injected"] is None:
-                chaos_state["injected"] = apply_chaos(srv.injector, cmap)
+                n = apply_chaos(srv.injector, cmap)
+                chaos_state["injected"] = n
+                srv.log.emit("chaos.injected", n=n)
 
     t0 = time.perf_counter()
     summary = server.run(trace, max_steps=args.max_steps, on_step=on_step)
@@ -168,11 +179,30 @@ def main(argv=None):
           f"({server.manager.steps_per_sweep} steps/sweep); cycle model "
           f"p={groups}: {detection_cycles(args.rows, args.cols, dppu_groups=groups)} "
           f"cycles/sweep (p=1: {detection_cycles(args.rows, args.cols)})")
+    if summary.get("detections"):
+        print(f"[serve] detection latency (steps, measured): "
+              f"mean={summary['detect_latency_mean_steps']:.1f} "
+              f"p50={summary['detect_latency_p50_steps']:.1f} "
+              f"p95={summary['detect_latency_p95_steps']:.1f} "
+              f"over {summary['detections']} confirmations "
+              f"(injected at steps {summary['injection_steps']})")
+    if args.counters:
+        c = summary["counters"]
+        print(f"[serve] counters: steps={c['steps']} "
+              f"protected_calls={c['protected_calls']} plain={c['plain_calls']} "
+              f"fault={c['fault_fraction']:.2e} corrupted={c['corrupted_fraction']:.2e} "
+              f"pruned={c['pruned_fraction']:.2e}")
     for k in ("steps", "tokens", "tokens_per_step", "goodput_tokens",
               "requests_completed", "requests_failed", "ttft_mean_steps",
               "queue_depth_mean", "scan_sweeps", "effective_slots_final"):
         print(f"    {k:>22} = {summary[k]}")
     print(f"    {'wall_s':>22} = {dt:.2f}")
+    if args.metrics_out:
+        from repro.obs.export import write_metrics_out
+
+        path, prom = write_metrics_out(args.metrics_out, summary, server.log,
+                                       labels={"arch": lm.name, "mode": args.mode})
+        print(f"[serve] metrics: events -> {path}  summary -> {prom}")
     return summary
 
 

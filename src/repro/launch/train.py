@@ -256,6 +256,10 @@ def main(argv=None):
     ap.add_argument("--protect-fraction", type=float, default=1.0)
     ap.add_argument("--hyca-faults", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write per-step train.step events as JSONL to PATH "
+                         "and a final-summary gauge file to PATH.prom "
+                         "(docs/observability.md)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -298,6 +302,13 @@ def main(argv=None):
             start, state = resumed
             print(f"[train] resumed from step {start}")
 
+    log = None
+    if args.metrics_out:
+        from repro.obs.events import EventLog
+
+        log = EventLog()
+
+    last_loss = last_gnorm = None
     with use_mesh(mesh):
         for step in range(start, args.steps):
             batch = jax.tree.map(jnp.asarray, data.batch(step))
@@ -305,10 +316,30 @@ def main(argv=None):
             state, metrics = step_fn(state, batch, fault_state)
             loss = float(metrics["loss"])
             dt = time.perf_counter() - t0
+            last_loss, last_gnorm = loss, float(metrics["gnorm"])
+            if log is not None:
+                log.step = step
+                log.emit("train.step", loss=loss, lr=float(metrics["lr"]),
+                         gnorm=last_gnorm, ms=dt * 1e3)
             if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
                 print(f"[train] step {step:5d} loss {loss:8.4f} lr {float(metrics['lr']):.2e} gnorm {float(metrics['gnorm']):7.3f} {dt*1e3:7.1f} ms")
             if mgr is not None:
                 mgr.maybe_save(step + 1, state, {"arch": cfg.name})
+    if log is not None:
+        from repro.obs.export import write_metrics_out
+
+        times = [e.data["ms"] for e in log.of_kind("train.step")]
+        summary = {
+            "steps": len(times),
+            "loss_final": last_loss,
+            "gnorm_final": last_gnorm,
+            "step_ms_mean": sum(times) / len(times) if times else None,
+        }
+        path, prom = write_metrics_out(
+            args.metrics_out, summary, log,
+            labels={"arch": cfg.name, "hyca_mode": args.hyca_mode},
+        )
+        print(f"[train] metrics: events -> {path}  summary -> {prom}")
     return state
 
 

@@ -1,0 +1,45 @@
+"""repro.obs — unified observability for the fault-tolerant runtime.
+
+Three layers (docs/observability.md):
+
+  * :mod:`repro.obs.counters` — device-side FT counters: a :class:`Counters`
+    pytree carried as an optional FTContext leaf, accumulated under jit from
+    a statically-discovered call ledger + the engine's own fault grids.
+    Exact element accounting (fault / recomputed / corrupted / pruned MACs,
+    per-site dispatch counts) with zero retrace on fault-table or plan swaps
+    and a decode graph bit-identical to the counters-off program.
+  * :mod:`repro.obs.events` — structured fault-lifecycle tracing: a
+    JSONL-serializable :class:`EventLog` wired through the injector, the
+    FaultManager, the repair hook, and the fleet sim; detection and repair
+    latency derive from it (exact under chaos injection — injection steps
+    are known).
+  * :mod:`repro.obs.export` / :mod:`repro.obs.schema` — a Prometheus-style
+    text exporter for ``--metrics-out`` and the event-schema validator the
+    CI ``obs-smoke`` lane runs over emitted logs.
+
+The bench regression gate (``benchmarks/regress.py``) closes the loop:
+committed ``experiments/bench/*.json`` baselines become per-metric budgets.
+"""
+from repro.obs.counters import (  # noqa: F401
+    Counters,
+    SiteCall,
+    ledger_stats,
+    trace_site_calls,
+)
+from repro.obs.events import (  # noqa: F401
+    Event,
+    EventLog,
+    detection_records,
+    repair_records,
+)
+from repro.obs.export import prometheus_text, write_metrics_out  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.obs.schema` imports this package first, and an
+    # eager schema import there would double-import the CLI module
+    if name in ("validate_event", "validate_jsonl", "KIND_SCHEMAS"):
+        from repro.obs import schema
+
+        return getattr(schema, name)
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

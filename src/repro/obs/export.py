@@ -1,0 +1,72 @@
+"""Metric export: Prometheus-style text + JSONL event dump.
+
+``--metrics-out PATH`` on ``launch/serve`` and ``launch/train`` writes two
+artifacts: the event log as JSONL at PATH (validated by
+``python -m repro.obs.schema``) and the flattened summary as a
+Prometheus text-format gauge file at ``PATH + ".prom"`` — the de-facto
+scrape format, so a node exporter's textfile collector (or a human with
+grep) can consume serving telemetry without a client library.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _metric_name(prefix: str, *parts: str) -> str:
+    name = "_".join([prefix, *parts])
+    return _NAME_RE.sub("_", name)
+
+
+def _flatten(d: dict, parts: tuple[str, ...] = ()) -> list[tuple[tuple[str, ...], float]]:
+    out: list[tuple[tuple[str, ...], float]] = []
+    for k, v in d.items():
+        p = parts + (str(k),)
+        if isinstance(v, dict):
+            out.extend(_flatten(v, p))
+        elif isinstance(v, bool):
+            out.append((p, float(v)))
+        elif isinstance(v, (int, float)):
+            out.append((p, float(v)))
+        # None / strings / lists have no gauge representation — skipped
+    return out
+
+
+def prometheus_text(metrics: dict, *, prefix: str = "hyca", labels: dict | None = None) -> str:
+    """Flatten a (possibly nested) summary dict into Prometheus text format.
+
+    Numeric leaves become gauges named ``{prefix}_{dotted_path}``; None,
+    strings, and lists are skipped (they are not gauges).  ``labels`` are
+    attached to every sample (e.g. ``{"arch": "qwen1.5-0.5b"}``).
+    """
+    label_str = ""
+    if labels:
+        inner = ",".join(f'{_NAME_RE.sub("_", k)}="{v}"' for k, v in sorted(labels.items()))
+        label_str = "{" + inner + "}"
+    lines = []
+    for parts, value in _flatten(metrics):
+        name = _metric_name(prefix, *parts)
+        lines.append(f"# TYPE {name} gauge")
+        lines.append(f"{name}{label_str} {value:g}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_metrics_out(path: str, summary: dict, log=None, *,
+                      prefix: str = "hyca", labels: dict | None = None) -> tuple[str, str]:
+    """Write the ``--metrics-out`` artifact pair: the event log as JSONL at
+    ``path`` (empty file when no log) and the summary as Prometheus text at
+    ``path + ".prom"``.  Parent directories are created.  Returns the two
+    paths."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    if log is not None:
+        log.to_jsonl(path)
+    else:
+        with open(path, "w") as f:
+            f.write("")
+    prom_path = path + ".prom"
+    with open(prom_path, "w") as f:
+        f.write(prometheus_text(summary, prefix=prefix, labels=labels))
+    return path, prom_path

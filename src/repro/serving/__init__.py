@@ -20,6 +20,7 @@ from repro.serving.fault_manager import (  # noqa: F401
     FaultManagerConfig,
 )
 from repro.core.campaign import ChaosSpec  # noqa: F401  (chaos-injection hook)
+from repro.obs.events import EventLog  # noqa: F401  (per-server fault tracing)
 from repro.serving.fleet import FleetConfig, run_fleet  # noqa: F401
 from repro.serving.metrics import ServingMetrics, StepRecord  # noqa: F401
 from repro.serving.queue import CompletedRequest, Request, RequestQueue  # noqa: F401

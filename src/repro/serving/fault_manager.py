@@ -87,6 +87,10 @@ class FaultInjector:
         self.stuck_bit = np.zeros((rows, cols), np.int32)
         self.stuck_val = np.zeros((rows, cols), np.int32)
         self.version = 0  # bumped on every change; lets callers cache states
+        # optional repro.obs EventLog (the server attaches its own): every
+        # injection is stamped with the log's current step, which is what
+        # makes detection latency *measured* rather than modelled
+        self.log = None
 
     @property
     def n_faults(self) -> int:
@@ -102,6 +106,10 @@ class FaultInjector:
         self.stuck_bit[row, col] = self.rng.integers(0, 32) if bit is None else bit
         self.stuck_val[row, col] = self.rng.integers(0, 2) if val is None else val
         self.version += 1
+        if self.log is not None:
+            self.log.emit("fault.injected", row=int(row), col=int(col),
+                          bit=int(self.stuck_bit[row, col]),
+                          val=int(self.stuck_val[row, col]))
 
     def inject_n(self, n: int) -> None:
         """n new faults at uniform-random healthy PEs."""
@@ -216,6 +224,23 @@ class FaultManager:
         self.scans = 0
         self.repairs = 0
         self.remaps = 0
+        # optional repro.obs EventLog (shared with the injector): lifecycle
+        # transitions and sweep completions are emitted here
+        self.log = None
+        # one event per (label, PE): _sync/_reassign_repair re-derive labels
+        # from the hit grid every step (REMAPPED PEs churn through CONFIRMED
+        # each pass), so the log dedupes what the state machine re-visits
+        self._emitted: set[tuple[str, int, int]] = set()
+
+    def _emit(self, kind: str, **data) -> None:
+        if self.log is not None:
+            self.log.emit(kind, **data)
+
+    def _emit_lifecycle(self, label: str, row: int, col: int) -> None:
+        key = (label, row, col)
+        if key not in self._emitted:
+            self._emitted.add(key)
+            self._emit(f"fault.{label}", row=row, col=col)
 
     # ------------------------------------------------------------------ #
     @property
@@ -312,6 +337,7 @@ class FaultManager:
                 new = RETIRED
             if self.pe_state[r, c] != new:
                 self.pe_state[r, c] = new
+                self._emit_lifecycle(new, r, c)
                 if new == REPAIRED:
                     self.repairs += 1
                 elif new == REMAPPED:
@@ -324,10 +350,15 @@ class FaultManager:
         confirmed = hits >= self.cfg.confirm_hits
         suspect = (hits >= 1) & ~confirmed
         ps = self.pe_state
-        ps[suspect & (ps == HEALTHY)] = SUSPECT
+        newly_suspect = suspect & (ps == HEALTHY)
+        for r, c in np.argwhere(newly_suspect):
+            self._emit_lifecycle("suspect", int(r), int(c))
+        ps[newly_suspect] = SUSPECT
         known = (ps == CONFIRMED) | (ps == REPAIRED) | (ps == RETIRED)
         newly = confirmed & ~known
         if newly.any():
+            for r, c in np.argwhere(newly):
+                self._emit_lifecycle("confirmed", int(r), int(c))
             ps[newly] = CONFIRMED
             self.confirmed_state = _merge(self.confirmed_state, jnp.asarray(confirmed))
             self._reassign_repair()
@@ -350,6 +381,8 @@ class FaultManager:
             jnp.asarray(px_b), jnp.asarray(pw), jnp.asarray(ar_b), jnp.asarray(arn_b),
         )
         self.scans += 1
+        if int(self.scan_state.sweep) > sweep:
+            self._emit("scan.sweep", sweep=sweep, steps=self.engine.cfg.steps_per_sweep)
         self._sync()
         return not bool(np.asarray(flags).any()), (r0, r0 + block)
 
@@ -398,6 +431,7 @@ class FaultManager:
                 hits=jnp.asarray(hits),
             )
         self._sync()
+        self._emit("scan.boot", sweeps=n_sweeps, confirmed=self.n_confirmed)
         return self.n_confirmed
 
     def bist(self) -> int:
@@ -412,4 +446,5 @@ class FaultManager:
         ).astype(np.int32)
         self.scan_state = dataclasses.replace(self.scan_state, hits=jnp.asarray(hits))
         self._sync()
+        self._emit("scan.bist", confirmed=self.n_confirmed)
         return self.n_confirmed

@@ -20,6 +20,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.campaign import ChaosSpec, apply_chaos, chaos_maps
+from repro.obs.events import detection_records, latency_summary
 from repro.runtime.elastic import SparePool
 from repro.serving.fault_manager import FaultInjector
 from repro.serving.queue import Request
@@ -100,9 +101,12 @@ def run_fleet(cfg: FleetConfig) -> dict:
         if cfg.chaos is not None and step == cfg.chaos.at_step:
             for i in cfg.chaos.targets(cfg.n_replicas):
                 if replicas[i].retired_at is None:
-                    chaos_injected += apply_chaos(
-                        replicas[i].server.injector, chaos_batch[i]
-                    )
+                    # stamp the event-log cursor so the fault.injected events
+                    # carry the chaos step — detection latency is then exact
+                    replicas[i].server.log.step = step
+                    n = apply_chaos(replicas[i].server.injector, chaos_batch[i])
+                    chaos_injected += n
+                    replicas[i].server.log.emit("chaos.injected", n=n)
         # arrivals: least-loaded routing over live replicas
         live = [r for r in replicas if r.retired_at is None]
         n_new = int(rng.poisson(cfg.request_rate * max(len(live), 1)))
@@ -148,6 +152,17 @@ def run_fleet(cfg: FleetConfig) -> dict:
     for rep in replicas:
         rep.server.metrics.finish()
 
+    # fleet-level detection latency: merge every replica's event log (chaos
+    # injections above stamp exact injection steps, so these are measured)
+    det_lat: list[int] = []
+    sus_lat: list[int] = []
+    for r in replicas:
+        for d in detection_records(r.server.log):
+            if d["latency"] is not None:
+                det_lat.append(d["latency"])
+            if d["suspect_latency"] is not None:
+                sus_lat.append(d["suspect_latency"])
+
     return {
         "steps": cfg.steps,
         "fault_rate": cfg.fault_rate,
@@ -164,13 +179,28 @@ def run_fleet(cfg: FleetConfig) -> dict:
             r.server.manager.n_remapped for r in replicas if r.retired_at is None
         ),
         "repair_events": sum(len(r.server.repair_events) for r in replicas),
+        # full repair-hook telemetry, tagged by replica position (satellite of
+        # docs/observability.md: what was remapped, where, at what quality)
+        "repair_event_log": [
+            dict(ev, replica=i)
+            for i, r in enumerate(replicas)
+            for ev in r.server.repair_events
+        ],
         "requests_lost": requests_lost,
         "spares_remaining": pool.remaining,
         "scan_steps_total": sum(r.server.manager.scans for r in replicas),
         "scan_steps_per_sweep": replicas[0].server.manager.steps_per_sweep
         if replicas else 0,
+        "scan_sweeps_total": sum(
+            len(r.server.log.of_kind("scan.sweep")) for r in replicas
+        ),
         "detection_cycles_model": replicas[0].server.manager.scan_cycles()
         if replicas else 0,
+        # MEASURED fleet detection latency (chaos-stamped injections only;
+        # empty without chaos or before any confirmation)
+        "detections": len(det_lat),
+        **latency_summary(det_lat, "detect_latency"),
+        **latency_summary(sus_lat, "suspect_latency"),
         "replica_summaries": [
             {
                 "region": r.region,
@@ -181,6 +211,10 @@ def run_fleet(cfg: FleetConfig) -> dict:
                 "surviving_cols": r.server.manager.surviving_cols,
                 "remapped": r.server.manager.n_remapped,
                 "quality_fraction": r.server.manager.quality_fraction,
+                "scan_steps": r.server.manager.scans,
+                "scan_sweeps": len(r.server.log.of_kind("scan.sweep")),
+                "repair_events": len(r.server.repair_events),
+                "events": len(r.server.log),
             }
             for r in replicas
         ],

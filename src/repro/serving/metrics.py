@@ -6,6 +6,18 @@ throughput (tokens/s wall and tokens/step), goodput (tokens of requests that
 finished successfully — and, when the caller supplies a reference, that also
 *match* the fault-free run), time-to-first-token percentiles, queue depth,
 scan coverage, and the degraded-capacity timeline.
+
+With an :class:`~repro.obs.events.EventLog` attached (the server wires its
+own), ``summary()`` also derives the fault-lifecycle observability metrics:
+detection latency (injection → CONFIRMED step deltas — exact under chaos
+injection, where injection steps are known), suspect latency, repair
+latency, completed scan sweeps, and scan coverage.  Pass ``counters=`` (the
+host-folded repro.obs counter dict) to embed the device-side MAC accounting.
+
+The wall clock starts lazily at the first ``record_step``, NOT at
+construction — bundle build + XLA compile time between constructing a
+server and stepping it would otherwise inflate ``wall_s`` and deflate
+``tokens_per_s``.
 """
 from __future__ import annotations
 
@@ -14,6 +26,7 @@ import time
 
 import numpy as np
 
+from repro.obs.events import detection_records, latency_summary, repair_records
 from repro.serving.queue import CompletedRequest
 
 
@@ -35,29 +48,34 @@ class StepRecord:
 
 class ServingMetrics:
     def __init__(self, n_slots: int, rows: int, cols: int,
-                 steps_per_sweep: int | None = None):
+                 steps_per_sweep: int | None = None, log=None):
         self.n_slots = n_slots
         self.rows, self.cols = rows, cols
         # probe steps per whole-array sweep: rows/scan_block with the batched
         # ScanEngine (the server passes it); the legacy one-PE-per-step
         # default is rows*cols
         self.steps_per_sweep = steps_per_sweep or rows * cols
+        self.log = log
         self.steps: list[StepRecord] = []
         self.completions: list[CompletedRequest] = []
-        self._t0 = time.perf_counter()
+        self._t0: float | None = None      # set at the first record_step
         self._wall: float | None = None
 
     def record_step(self, rec: StepRecord, completed: list[CompletedRequest]) -> None:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
         self.steps.append(rec)
         self.completions.extend(completed)
 
     def finish(self) -> None:
-        self._wall = time.perf_counter() - self._t0
+        self._wall = 0.0 if self._t0 is None else time.perf_counter() - self._t0
 
     # ------------------------------------------------------------------ #
     @property
     def wall_s(self) -> float:
-        return self._wall if self._wall is not None else (time.perf_counter() - self._t0)
+        if self._wall is not None:
+            return self._wall
+        return 0.0 if self._t0 is None else time.perf_counter() - self._t0
 
     def goodput_tokens(self, reference: dict[int, np.ndarray] | None = None) -> int:
         """Tokens from successfully completed requests.  With a ``reference``
@@ -82,7 +100,8 @@ class ServingMetrics:
             if c.first_token_step is not None
         ]
 
-    def summary(self, reference: dict[int, np.ndarray] | None = None) -> dict:
+    def summary(self, reference: dict[int, np.ndarray] | None = None, *,
+                counters: dict | None = None) -> dict:
         n_steps = len(self.steps)
         toks = sum(r.tokens_generated for r in self.steps)
         good = self.goodput_tokens(reference)
@@ -91,7 +110,7 @@ class ServingMetrics:
         n_pe_scans = len(scans)
         sweep = max(self.steps_per_sweep, 1)
         ok = [c for c in self.completions if c.ok]
-        return {
+        out = {
             "steps": n_steps,
             "wall_s": self.wall_s,
             "tokens": toks,
@@ -106,6 +125,9 @@ class ServingMetrics:
             "queue_depth_mean": float(np.mean([r.queue_depth for r in self.steps])) if self.steps else 0.0,
             "scan_steps": n_pe_scans,
             "scan_sweeps": n_pe_scans / sweep,
+            # fraction of the PE array probed at least once (1.0 once a full
+            # sweep has completed)
+            "scan_coverage": min(1.0, n_pe_scans / sweep),
             "confirmed_faults_final": self.steps[-1].confirmed_faults if self.steps else 0,
             "true_faults_final": self.steps[-1].true_faults if self.steps else 0,
             "surviving_cols_final": self.steps[-1].surviving_cols if self.steps else self.cols,
@@ -114,3 +136,20 @@ class ServingMetrics:
             "remapped_final": self.steps[-1].remapped if self.steps else 0,
             "quality_fraction_final": self.steps[-1].quality_fraction if self.steps else 1.0,
         }
+        if self.log is not None:
+            det = detection_records(self.log)
+            lat = [d["latency"] for d in det if d["latency"] is not None]
+            slat = [d["suspect_latency"] for d in det if d["suspect_latency"] is not None]
+            rlat = [r["latency"] for r in repair_records(self.log)]
+            out["events_total"] = len(self.log.events)
+            out["detections"] = len(lat)
+            out["injection_steps"] = sorted({
+                d["injected_step"] for d in det if d["injected_step"] is not None
+            })
+            out.update(latency_summary(lat, "detect_latency"))
+            out.update(latency_summary(slat, "suspect_latency"))
+            out.update(latency_summary(rlat, "repair_latency"))
+            out["sweeps_completed"] = len(self.log.of_kind("scan.sweep"))
+        if counters is not None:
+            out["counters"] = counters
+        return out

@@ -59,6 +59,7 @@ from repro.core.engine import FaultState, HyCAConfig, empty_fault_state, identit
 from repro.core.ftcontext import ProtectPolicy, build_ftcontext
 from repro.core.redundancy import DPPUConfig
 from repro.models.lm import LMConfig, decode_step, init_cache, init_params
+from repro.obs.events import EventLog
 from repro.repair.plan import remap_plan
 from repro.repair.remap import weight_salience
 from repro.serving.fault_manager import FaultInjector, FaultManager, FaultManagerConfig
@@ -93,6 +94,11 @@ class ServerConfig:
     repair: str = "none"
     retrain_steps: int = 4         # fine-tune budget when repair == "retrain"
     max_remap_fraction: float = 0.5
+    # repro.obs device-side counters: carry a Counters leaf through the
+    # compiled step (docs/observability.md).  Off by default — the ledger
+    # discovery trace at bundle build is the only cost; the decode graph's
+    # dot ops are identical either way.
+    counters: bool = False
     seed: int = 0
 
     def hyca(self) -> HyCAConfig:
@@ -134,13 +140,34 @@ class ModelBundle:
             plan=self.identity_plan,
         )
 
+        if cfg.counters:
+            # discover the static call ledger by abstractly tracing the
+            # decode step once (shapes only); attached as FTContext aux so
+            # accumulate() folds it under jit (repro.obs.counters)
+            from repro.obs.counters import trace_site_calls
+
+            lmc0 = self.lm
+            cache_shapes = jax.eval_shape(self.fresh_cache)
+            tok_shape = jax.ShapeDtypeStruct((cfg.n_slots, 1), jnp.int32)
+            ledger = trace_site_calls(
+                lambda c, p, ch, t: decode_step(p, lmc0, ch, {"token": t}, ftc=c),
+                self.ftc, self.params, cache_shapes, tok_shape,
+            )
+            self.ftc = self.ftc.with_ledger(ledger)
+
         lmc, ftc = self.lm, self.ftc
 
-        def _step(params, cache, tok, fstate, plan):
-            return decode_step(
-                params, lmc, cache, {"token": tok},
-                ftc=ftc.with_state(fstate).with_plan(plan),
-            )
+        if cfg.counters:
+            def _step(params, cache, tok, fstate, plan, counters):
+                c = ftc.with_state(fstate).with_plan(plan).with_counters(counters)
+                logits, cache = decode_step(params, lmc, cache, {"token": tok}, ftc=c)
+                return logits, cache, c.accumulate()
+        else:
+            def _step(params, cache, tok, fstate, plan):
+                return decode_step(
+                    params, lmc, cache, {"token": tok},
+                    ftc=ftc.with_state(fstate).with_plan(plan),
+                )
 
         def _reset(cache, slot):
             def f(path, leaf):
@@ -166,6 +193,11 @@ class ModelBundle:
     def fresh_cache(self) -> Any:
         return init_cache(self.lm, self.cfg.n_slots, self.cfg.smax)
 
+    def zero_counters(self):
+        from repro.obs.counters import Counters
+
+        return Counters.zero()
+
 
 # --------------------------------------------------------------------------- #
 # the server
@@ -186,9 +218,14 @@ class FaultTolerantServer:
         # siblings sharing the compiled bundle
         self.params = self.bundle.params
         self.plan = self.bundle.identity_plan
-        self.repair_events: list[dict] = []
         self._repair_key: tuple[int, int] | None = None
+        # repro.obs: one event log per server, shared with the injector and
+        # the manager; step() stamps the cursor, so injections and lifecycle
+        # transitions carry serving-time steps (docs/observability.md)
+        self.log = EventLog()
+        self.counters = self.bundle.zero_counters() if cfg.counters else None
         self.injector = injector or FaultInjector(cfg.rows, cfg.cols, seed=cfg.seed + 1)
+        self.injector.log = self.log
         self.manager = FaultManager(
             self.bundle.hyca, self.injector,
             FaultManagerConfig(
@@ -197,11 +234,17 @@ class FaultTolerantServer:
                 max_remap_fraction=cfg.max_remap_fraction,
             ),
         )
+        self.manager.log = self.log
+        self.log.emit(
+            "server.start", mode=cfg.mode, rows=cfg.rows, cols=cfg.cols,
+            dppu=cfg.dppu_size, dispatch=cfg.dispatch, arch=self.lm.name,
+        )
         self.queue = RequestQueue()
         self.scheduler = ContinuousBatchingScheduler(cfg.n_slots, cfg.smax)
         self.metrics = ServingMetrics(
             cfg.n_slots, cfg.rows, cfg.cols,
             steps_per_sweep=self.manager.steps_per_sweep,
+            log=self.log,
         )
         self.step_idx = 0
         self._next_rid = 0
@@ -311,19 +354,30 @@ class FaultTolerantServer:
                 ),
             )
         self.apply_repair(plan=plan, params=params)
-        self.repair_events.append({
-            "step": self.step_idx,
-            "mode": self.cfg.repair,
-            "n_remapped": self.manager.n_remapped,
-            "remapped_cols": sorted(self.manager.remapped_cols),
-            "quality_fraction": self.manager.quality_fraction,
-            "retrained": params is not None,
-        })
+        self.log.emit(
+            "repair.plan",
+            step=self.step_idx,
+            mode=self.cfg.repair,
+            n_remapped=self.manager.n_remapped,
+            remapped_cols=sorted(self.manager.remapped_cols),
+            quality_fraction=self.manager.quality_fraction,
+            retrained=params is not None,
+        )
+
+    @property
+    def repair_events(self) -> list[dict]:
+        """Repair-hook applications, as dicts (a view over the event log)."""
+        return [dict(e.data, step=e.step) for e in self.log.of_kind("repair.plan")]
+
+    def counters_host(self) -> dict | None:
+        """Host-folded device counters (None when ``cfg.counters`` is off)."""
+        return None if self.counters is None else self.counters.to_host()
 
     # ------------------------------------------------------------------ #
     def step(self) -> list[CompletedRequest]:
         cfg = self.cfg
         step = self.step_idx
+        self.log.step = step
         completed: list[CompletedRequest] = []
 
         # 1. hardware wearout
@@ -358,10 +412,16 @@ class FaultTolerantServer:
 
         # 5. one batched decode over all slots
         feed = self.scheduler.plan_feed()
-        logits, self.cache = self.bundle.step_fn(
-            self.params, self.cache, jnp.asarray(feed), self._current_fstate(),
-            self.plan,
-        )
+        if self.counters is not None:
+            logits, self.cache, self.counters = self.bundle.step_fn(
+                self.params, self.cache, jnp.asarray(feed), self._current_fstate(),
+                self.plan, self.counters,
+            )
+        else:
+            logits, self.cache = self.bundle.step_fn(
+                self.params, self.cache, jnp.asarray(feed), self._current_fstate(),
+                self.plan,
+            )
         sampled = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
 
         # 6. advance requests
@@ -403,6 +463,7 @@ class FaultTolerantServer:
         trace = sorted(trace or [], key=lambda t: t.get("step", 0))
         ti = 0
         while self.step_idx < max_steps:
+            self.log.step = self.step_idx
             if on_step is not None:
                 on_step(self)
             while ti < len(trace) and trace[ti].get("step", 0) <= self.step_idx:
@@ -426,7 +487,7 @@ class FaultTolerantServer:
                     first_token_step=None, finish_step=self.step_idx, reason="dropped",
                 ))
         self.metrics.finish()
-        return self.metrics.summary()
+        return self.metrics.summary(counters=self.counters_host())
 
     def completions_by_rid(self) -> dict[int, np.ndarray]:
         return {c.rid: c.tokens for c in self.metrics.completions if c.ok}
