@@ -6,18 +6,36 @@ MoE / SSM), for each dispatch mode that runs on this backend:
 
   * ``off``     — ftc=None, the production plain-matmul path (baseline);
   * ``twopass`` — engine.hyca_matmul (corrupt + DPPU overwrite, pure jnp);
-  * ``fused``   — the fused dispatch (Pallas kernel on TPU; on CPU the
-                  element-granular jnp fallback chosen at context build).
+  * ``fused``   — the fused dispatch: Pallas kernel on TPU, the single-pass
+                  packed-meta epilogue (one gather + one select chain per
+                  output view) elsewhere.
 
-The CI smoke job runs this per-PR (``--quick``) and archives
-experiments/bench/ft_overhead.json, so dispatch-layer perf regressions —
-e.g. reintroducing a both-branches gate like the old ``_gated_dot`` — show
-up as an overhead-ratio jump rather than silently shipping.
+Two record sets feed the regression gate (``benchmarks/regress.py``):
+
+  * ``results``      — whole-model overhead per family, keyed ``arch``, with
+    a ``fused_speedup_x`` column (twopass_ms / fused_ms — how much the fused
+    path beats the paper-faithful two-pass engine);
+  * ``site_results`` — per-site-group overhead (attention / ffn / moe / ssm
+    / head), keyed ``(arch, site)``: only that group is protected, so a
+    future regression localizes to a call site instead of a model.
+
+Timing is min-of-repeats (each repeat re-inits the KV cache and averages
+``steps`` decode steps) with the repeats of all modes round-robined — see
+``_time_interleaved``: the min is robust to scheduler noise and the
+interleaving cancels seconds-scale machine-speed drift out of the ratios,
+both of which at the sub-millisecond scale of the smoke configs otherwise
+dominate.
 
 Claims checked: protected-mode steps produce logits bit-exact with the same
-compiled step on a fault-free array while faults <= capacity (the overhead
-being measured buys correctness), and the overhead ratio stays
-finite/positive (harness sanity).
+compiled step on a fault-free array while faults <= capacity — for twopass,
+fused, and fused with a RepairPlan attached (the in-kernel plan epilogue) —
+and every overhead ratio is finite and positive (harness sanity).  The
+timing claims — fused no slower than twopass everywhere (<= 5% tolerance)
+and the dense family's fused overhead meeting the <= 1.10x ROADMAP target —
+are asserted in FULL mode only: the committed-baseline run.  ``--quick`` CI
+runs skip them (8-step averages on a shared runner flip coin-toss-level
+deltas) and are gated by ``regress.py``'s budget ratios instead, which
+carry explicit machine-noise slack.
 """
 from __future__ import annotations
 
@@ -30,8 +48,13 @@ import numpy as np
 
 from benchmarks.common import Claims, save_result
 from repro.configs import get_smoke_config
-from repro.core.engine import HyCAConfig, empty_fault_state, fault_state_from_map
-from repro.core.ftcontext import build_ftcontext
+from repro.core.engine import (
+    HyCAConfig,
+    empty_fault_state,
+    fault_state_from_map,
+    identity_plan,
+)
+from repro.core.ftcontext import ProtectPolicy, build_ftcontext
 from repro.core.redundancy import DPPUConfig
 from repro.models.lm import decode_step, init_cache, init_params
 
@@ -40,8 +63,68 @@ ROWS = COLS = 8
 DPPU = 8
 N_FAULTS = 4
 
+# Site groups for the per-site breakdown; only groups a family actually
+# exercises are measured (protecting an absent site times the off path).
+SITE_GROUPS: dict[str, tuple[str, ...]] = {
+    "attention": ("attn.qkv", "attn.out"),
+    "ffn": ("ffn",),
+    "moe": ("moe.router", "moe.expert"),
+    "ssm": ("ssm.in", "ssm.out"),
+    "head": ("head",),
+}
+ARCH_GROUPS: dict[str, tuple[str, ...]] = {
+    "qwen1.5-0.5b": ("attention", "ffn", "head"),
+    "deepseek-moe-16b": ("attention", "ffn", "moe", "head"),
+    "rwkv6-7b": ("ssm", "ffn", "head"),
+}
 
-def _bench_arch(arch: str, *, n_slots: int, smax: int, steps: int, claims: Claims) -> dict:
+
+def _make_step(cfg, ftc):
+    if ftc is None:
+        return jax.jit(lambda p, c, t: decode_step(p, cfg, c, {"token": t}))
+    # fault table as a traced argument: the timed protected run and the
+    # fault-free reference share one compiled program (mode is a data
+    # difference — the serving-layer design)
+    return jax.jit(
+        lambda p, c, t, fs, ftc=ftc: decode_step(
+            p, cfg, c, {"token": t}, ftc=ftc.with_state(fs)
+        )
+    )
+
+
+def _time_interleaved(entries: dict[str, tuple], params, cfg, n_slots: int,
+                      smax: int, *, steps: int, repeats: int) -> dict[str, float]:
+    """Time each (step_fn, args) entry as min-of-repeats ms/step — with the
+    repeats ROUND-ROBINED across entries, not run back to back.  The ratios
+    this benchmark gates divide one entry's time by another's, and on a
+    shared CPU the machine's effective speed drifts on the seconds scale: if
+    each mode's repeats run consecutively, whichever mode lands on a slow
+    window eats the whole drift as fake overhead.  Interleaving gives every
+    mode a sample in every window, so the per-mode min converges to the same
+    fast-machine state and drift divides out of the ratios."""
+    warm: dict[str, tuple] = {}
+    for name, (step, args) in entries.items():
+        cache = init_cache(cfg, n_slots, smax)
+        lg, cache = step(params, cache, *args)  # compile + warmup
+        jax.block_until_ready(lg)
+        warm[name] = (step, args)
+    best = {name: float("inf") for name in entries}
+    for _ in range(repeats):
+        for name, (step, args) in warm.items():
+            cache = init_cache(cfg, n_slots, smax)
+            lg, cache = step(params, cache, *args)  # re-warm this window
+            jax.block_until_ready(lg)
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                lg, cache = step(params, cache, *args)
+            jax.block_until_ready(lg)
+            best[name] = min(best[name], (time.perf_counter() - t0) / steps * 1e3)
+    return best
+
+
+def _bench_arch(arch: str, *, n_slots: int, smax: int, steps: int,
+                repeats: int, claims: Claims,
+                timing_claims: bool) -> tuple[dict, list[dict]]:
     cfg = get_smoke_config(arch)
     params = init_params(jax.random.key(0), cfg)
     rng = np.random.default_rng(0)
@@ -62,70 +145,128 @@ def _bench_arch(arch: str, *, n_slots: int, smax: int, steps: int, claims: Claim
     tok = jnp.asarray(rng.integers(0, cfg.vocab, (n_slots, 1)), jnp.int32)
     empty = empty_fault_state(N_FAULTS)
     result: dict = {"arch": arch}
-    exact = {}
+    entries = {
+        name: (_make_step(cfg, ftc), (tok,) if ftc is None else (tok, state))
+        for name, ftc in contexts.items()
+    }
+    times = _time_interleaved(entries, params, cfg, n_slots, smax,
+                              steps=steps, repeats=repeats)
     for name, ftc in contexts.items():
-        if ftc is None:
-            step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, {"token": t}))
-        else:
-            # fault table as a traced argument: the timed protected run and
-            # the fault-free reference share one compiled program (mode is
-            # a data difference — the serving-layer design)
-            step = jax.jit(
-                lambda p, c, t, fs, ftc=ftc: decode_step(
-                    p, cfg, c, {"token": t}, ftc=ftc.with_state(fs)
-                )
-            )
-        cache = init_cache(cfg, n_slots, smax)
-        args = (tok,) if ftc is None else (tok, state)
-        lg, cache = step(params, cache, *args)         # compile + warmup
-        jax.block_until_ready(lg)
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            lg, cache = step(params, cache, *args)
-        jax.block_until_ready(lg)
-        ms = (time.perf_counter() - t0) / steps * 1e3
-        result[f"{name}_ms_per_step"] = round(ms, 3)
+        step, _ = entries[name]
+        result[f"{name}_ms_per_step"] = round(times[name], 3)
         if ftc is not None:
             # bit-exactness: protected vs the fault-free array, same program
-            cache_p = init_cache(cfg, n_slots, smax)
-            lg_p, _ = step(params, cache_p, tok, state)
-            cache_e = init_cache(cfg, n_slots, smax)
-            lg_e, _ = step(params, cache_e, tok, empty)
-            exact[name] = bool(
-                np.array_equal(np.asarray(lg_p, np.float32), np.asarray(lg_e, np.float32))
+            lg_p, _ = step(params, init_cache(cfg, n_slots, smax), tok, state)
+            lg_e, _ = step(params, init_cache(cfg, n_slots, smax), tok, empty)
+            claims.check(
+                f"{arch}: {name} protected logits bit-exact with fault-free "
+                f"run (faults <= capacity)",
+                bool(np.array_equal(np.asarray(lg_p, np.float32),
+                                    np.asarray(lg_e, np.float32))),
             )
 
+    # fused + RepairPlan: the in-kernel plan epilogue with the identity plan
+    # (native mapping, nothing pruned) must stay bit-exact with plan=None —
+    # and therefore with the fault-free run under capacity
+    ftc_plan = build_ftcontext(state, hyca, dispatch="fused",
+                               plan=identity_plan(ROWS, COLS))
+    step_plan = _make_step(cfg, ftc_plan)
+    lg_p, _ = step_plan(params, init_cache(cfg, n_slots, smax), tok, state)
+    lg_e, _ = step_plan(params, init_cache(cfg, n_slots, smax), tok, empty)
+    claims.check(
+        f"{arch}: fused+plan protected logits bit-exact with fault-free run "
+        f"(identity plan, faults <= capacity)",
+        bool(np.array_equal(np.asarray(lg_p, np.float32),
+                            np.asarray(lg_e, np.float32))),
+    )
+
+    off_ms = max(result["off_ms_per_step"], 1e-9)
     for name in ("twopass", "fused"):
-        result[f"{name}_overhead_x"] = round(
-            result[f"{name}_ms_per_step"] / max(result["off_ms_per_step"], 1e-9), 3
-        )
-        claims.check(
-            f"{arch}: {name} protected logits bit-exact with fault-free run (faults <= capacity)",
-            exact[name],
-        )
+        result[f"{name}_overhead_x"] = round(result[f"{name}_ms_per_step"] / off_ms, 3)
         claims.check(
             f"{arch}: {name} overhead ratio finite and positive",
             0 < result[f"{name}_overhead_x"] < float("inf"),
             f"{result[f'{name}_overhead_x']}x",
         )
-    return result
+    result["fused_speedup_x"] = round(
+        result["twopass_ms_per_step"] / max(result["fused_ms_per_step"], 1e-9), 3
+    )
+    if timing_claims:
+        claims.check(
+            f"{arch}: fused no slower than twopass (<= 5% tolerance)",
+            result["fused_ms_per_step"] <= result["twopass_ms_per_step"] * 1.05,
+            f"fused {result['fused_ms_per_step']} ms vs twopass "
+            f"{result['twopass_ms_per_step']} ms",
+        )
+
+    # per-site breakdown: protect one site group at a time — all (group,
+    # dispatch) pairs interleaved in one round-robin for the same reason,
+    # WITH its own off entry (the site rows' denominators must come from the
+    # same interleave block as their numerators, or block-to-block machine
+    # drift shows up as sites "faster than off")
+    site_entries: dict[str, tuple] = {"off": entries["off"]}
+    for group in ARCH_GROUPS[arch]:
+        policy = ProtectPolicy(sites=frozenset(SITE_GROUPS[group]))
+        for name in ("twopass", "fused"):
+            ftc = build_ftcontext(state, hyca, policy=policy, dispatch=name)
+            site_entries[f"{group}/{name}"] = (_make_step(cfg, ftc), (tok, state))
+    site_times = _time_interleaved(site_entries, params, cfg, n_slots, smax,
+                                   steps=steps, repeats=repeats)
+    site_off_ms = max(site_times["off"], 1e-9)
+    site_rows: list[dict] = []
+    for group in ARCH_GROUPS[arch]:
+        row: dict = {"arch": arch, "site": group}
+        for name in ("twopass", "fused"):
+            ms = site_times[f"{group}/{name}"]
+            row[f"{name}_ms_per_step"] = round(ms, 3)
+            row[f"{name}_overhead_x"] = round(ms / site_off_ms, 3)
+        row["fused_speedup_x"] = round(
+            row["twopass_ms_per_step"] / max(row["fused_ms_per_step"], 1e-9), 3
+        )
+        site_rows.append(row)
+    return result, site_rows
 
 
 def run(quick: bool = False) -> dict:
-    steps = 8 if quick else 32
+    # Full mode is the committed-baseline run and asserts the timing claims,
+    # so it buys noise robustness with longer windows: 48-step windows x
+    # best-of-8 converge the min estimator to well under the 10% margin the
+    # 1.10x ROADMAP claim needs.
+    steps = 8 if quick else 48
+    repeats = 3 if quick else 8
+    # Batch 16 is the serving-representative decode batch: the epilogue's
+    # per-site cost is a handful of O(M*N) elementwise ops + fixed dispatch
+    # overhead against the step's O(M*N*K) matmuls, so a batch-1-scale step
+    # (~0.3 ms on the smoke configs) measures XLA op-dispatch latency, not
+    # the protection tax the overhead ratios are meant to track.
+    n_slots = 4 if quick else 16
     claims = Claims("ft_overhead")
-    # KV capacity must cover warmup + every timed step: a decode at
-    # idx == smax would be silently dropped by JAX OOB scatter semantics
-    # and the tail of the timed loop would no longer measure a real decode
-    per_arch = [
-        _bench_arch(a, n_slots=4, smax=steps + 8, steps=steps, claims=claims)
-        for a in FAMILIES
-    ]
+    per_arch: list[dict] = []
+    per_site: list[dict] = []
+    for a in FAMILIES:
+        # KV capacity must cover warmup + every timed step: a decode at
+        # idx == smax would be silently dropped by JAX OOB scatter semantics
+        # and the tail of the timed loop would no longer measure a real decode
+        r, s = _bench_arch(a, n_slots=n_slots, smax=steps + 8, steps=steps,
+                           repeats=repeats, claims=claims,
+                           timing_claims=not quick)
+        per_arch.append(r)
+        per_site.extend(s)
+    if not quick:
+        dense = next(r for r in per_arch if r["arch"] == "qwen1.5-0.5b")
+        claims.check(
+            "qwen1.5-0.5b: fused overhead meets the <= 1.10x ROADMAP target",
+            dense["fused_overhead_x"] <= 1.10,
+            f"{dense['fused_overhead_x']}x",
+        )
     return {
         "backend": jax.default_backend(),
         "steps": steps,
+        "repeats": repeats,
+        "n_slots": n_slots,
         "rows": ROWS, "cols": COLS, "dppu": DPPU, "n_faults": N_FAULTS,
         "results": per_arch,
+        "site_results": per_site,
         "claims": claims.items,
         "all_ok": claims.all_ok,
     }
@@ -143,7 +284,15 @@ def main(argv=None) -> int:
         print(
             f"[ft_overhead] {r['arch']:>18}: off {r['off_ms_per_step']:7.2f} ms  "
             f"twopass {r['twopass_ms_per_step']:7.2f} ms ({r['twopass_overhead_x']}x)  "
-            f"fused {r['fused_ms_per_step']:7.2f} ms ({r['fused_overhead_x']}x)"
+            f"fused {r['fused_ms_per_step']:7.2f} ms ({r['fused_overhead_x']}x, "
+            f"{r['fused_speedup_x']}x vs twopass)"
+        )
+    for r in out["site_results"]:
+        print(
+            f"[ft_overhead] {r['arch']:>18}/{r['site']:<9}: "
+            f"twopass {r['twopass_overhead_x']:6.3f}x  "
+            f"fused {r['fused_overhead_x']:6.3f}x  "
+            f"(speedup {r['fused_speedup_x']}x)"
         )
     print(f"[ft_overhead] wrote {path} ({out['elapsed_s']}s)")
     return 0 if out["all_ok"] else 1

@@ -423,6 +423,112 @@ def hyca_matmul(
     return _hyca_matmul_impl(x, w, state, plan, cfg=cfg, n_repair=n_repair)
 
 
+# --------------------------------------------------------------------------- #
+# single-pass fused epilogue (the fused dispatch's element-granular fast path)
+# --------------------------------------------------------------------------- #
+# Packed per-PE metadata layout: one int32 per PE instead of four separate
+# grids, so the per-call output-view gather is ONE (M, N) gather rather than
+# bit/val/faulty/repaired/prune each materialising their own.
+META_BIT_MASK = 31       # bits 0..4: stuck accumulator bit index (0..31)
+META_VAL_SHIFT = 5       # bit 5: stuck-at value
+META_EFF_SHIFT = 6       # bit 6: effective fault (faulty & ~repaired)
+META_PRUNE_SHIFT = 7     # bit 7: RepairPlan prune mask
+
+
+def fault_meta_grid(
+    state: FaultState,
+    cfg: HyCAConfig,
+    plan: RepairPlan | None = None,
+    *,
+    n_repair: int | None = None,
+) -> jax.Array:
+    """Packed (rows, cols) int32 meta grid for the fused single-pass epilogue.
+
+    Folds the whole two-pass decision tree down to per-PE bits *at grid
+    granularity* (rows·cols elements — tiny) so the per-output work is one
+    gather + one select chain instead of corrupt-everything + overwrite:
+
+      * ``eff`` (bit 6) is ``faulty & ~repaired`` — the only case that leaves
+        corruption in the output; repaired faults vanish here, which is the
+        engine-side statement of the kernel's "repaired tiles skip the fault
+        mux at drain";
+      * the :class:`RepairPlan` column gather (``col_map``) is applied to the
+        grid, not the output view, and the prune mask rides along as bit 7 —
+        plan-active decode costs zero extra output-sized passes;
+      * the DPPU capacity clamp is identical to :func:`hyca_matmul`'s.
+    """
+    bit, val, faulty = _pe_grids(state, cfg.rows, cfg.cols)
+    if cfg.mode == "unprotected":
+        repaired = jnp.zeros((cfg.rows, cfg.cols), bool)
+    else:
+        k = cfg.capacity if n_repair is None else min(n_repair, state.max_faults, cfg.capacity)
+        repaired = repaired_grid(state, cfg.rows, cfg.cols, k)
+    if plan is not None:
+        cm = plan.col_map
+        bit, val, faulty, repaired = bit[:, cm], val[:, cm], faulty[:, cm], repaired[:, cm]
+        prune = plan.prune[:, cm].astype(jnp.int32)
+    else:
+        prune = jnp.zeros((cfg.rows, cfg.cols), jnp.int32)
+    eff = (faulty & ~repaired).astype(jnp.int32)
+    return bit | (val << META_VAL_SHIFT) | (eff << META_EFF_SHIFT) | (prune << META_PRUNE_SHIFT)
+
+
+def apply_fault_epilogue(
+    out: jax.Array,
+    meta: jax.Array,
+    rows: int,
+    cols: int,
+    *,
+    row_residue: jax.Array | None = None,
+) -> jax.Array:
+    """Apply a packed fault meta grid to an ``(..., N)`` output view in one
+    pass — bit-identical to the two-pass corrupt + DPPU-overwrite + prune
+    sequence in :func:`hyca_matmul` (``where(eff, stuck(out), out)`` equals
+    ``where(repaired, out, where(faulty, stuck(out), out))`` because
+    ``repaired ⊆ faulty``; asserted across modes in tests/test_ft_fused.py).
+
+    ``row_residue``: precomputed ``i % rows`` indices broadcastable against
+    the leading axes (the batched expert path passes ``(b, 1, c, 1)`` so one
+    epilogue covers every expert); default is the flattened-2-D view's rows.
+
+    The whole decision tree lowers to a per-PE **AND/OR mask pair** computed
+    at grid granularity (rows·cols — tiny, state-dependent only, so XLA
+    hoists it out of decode scans and CSEs it across calls):
+
+      * clean / repaired      — ``(raw & ~0) | 0``  (bit-identity)
+      * stuck-at-1 on bit b   — ``(raw & ~0) | (1 << b)``
+      * stuck-at-0 on bit b   — ``(raw & ~(1 << b)) | 0``
+      * pruned                — ``(raw & 0) | 0``  (bit-pattern 0 IS 0.0)
+
+    so the per-output-element cost is two (M, N) gathers + one AND + one OR
+    (+ two bitcasts for float dtypes) — the minimal single-pass epilogue.
+    (Tile-and-slice mask materialization was measured against the gather on
+    CPU: identical at decode shapes, slower at prefill panels — the gather
+    stays.)
+    """
+    n = out.shape[-1]
+    if row_residue is None:
+        m = out.shape[0]
+        row_residue = (jnp.arange(m) % rows)[:, None]
+    col_residue = jnp.arange(n) % cols
+    # grid-granularity mask construction (hoisted: depends on meta only)
+    bit = meta & META_BIT_MASK
+    val = (meta >> META_VAL_SHIFT) & 1
+    eff = (meta >> META_EFF_SHIFT) & 1
+    prune = (meta >> META_PRUNE_SHIFT) & 1
+    mask = jnp.left_shift(jnp.int32(1), bit)
+    keep = jnp.int32(-1)  # all ones
+    and_grid = jnp.where(prune > 0, jnp.int32(0),
+                         jnp.where((eff > 0) & (val == 0), ~mask, keep))
+    or_grid = jnp.where((prune == 0) & (eff > 0) & (val > 0), mask, jnp.int32(0))
+    am = and_grid[row_residue, col_residue]
+    om = or_grid[row_residue, col_residue]
+    if jnp.issubdtype(out.dtype, jnp.integer):
+        return ((out.astype(jnp.int32) & am) | om).astype(out.dtype)
+    raw = jax.lax.bitcast_convert_type(out.astype(jnp.float32), jnp.int32)
+    return jax.lax.bitcast_convert_type((raw & am) | om, jnp.float32).astype(out.dtype)
+
+
 def _pe_multiplicity(m: int, n: int, rows: int, cols: int) -> np.ndarray:
     """Static (rows, cols) grid: how many elements of an (m, n) output view
     map onto each PE under the engine's out[i, j] -> PE(i % rows, j % cols)

@@ -41,6 +41,8 @@ from repro.core.engine import (
     HyCAConfig,
     RepairPlan,
     _pe_grids,
+    apply_fault_epilogue,
+    fault_meta_grid,
     hyca_matmul,
     repaired_grid,
     validate_fault_state,
@@ -64,6 +66,10 @@ SITES = (
 
 DISPATCHES = ("plain", "twopass", "fused")
 FUSED_BACKENDS = ("pallas", "interpret", "ref")
+
+# Batched-weight einsum patterns FTContext.einsum understands (the MoE
+# expert matmuls, activation-major and weight-transposed).
+EINSUM_SPECS = ("becd,edf->becf", "becf,efd->becd")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +124,9 @@ class FTContext:
     policy: ProtectPolicy = dataclasses.field(default_factory=ProtectPolicy)
     dispatch: str = "twopass"
     fused_backend: str = "ref"
-    fused_block: tuple[int, int, int] = (128, 128, 128)
+    # (bm, bn, bk) kernel block, or "auto" to resolve per call shape through
+    # the autotune cache (kernels.autotune).  Hashable either way — aux data.
+    fused_block: tuple[int, int, int] | str = "auto"
     # repro.repair: one RepairPlan for all sites, or {site: RepairPlan}.
     # A traced leaf like `state` — plan swaps never recompile (the dict's
     # keys, like every other treedef change, recompile once when the plan
@@ -240,7 +248,7 @@ class FTContext:
         elif self.dispatch == "twopass":
             out = hyca_matmul(x, w, self.state, cfg=self.hyca, plan=plan)
         elif self.dispatch == "fused":
-            out = self._fused(x, w, plan)
+            out = self._fused(x, w, plan, site=site)
         else:
             raise ValueError(f"unknown dispatch {self.dispatch!r}; known: {DISPATCHES}")
         return out.astype(x.dtype)
@@ -248,12 +256,22 @@ class FTContext:
     def einsum(self, spec: str, x: jax.Array, w: jax.Array, *, site: str) -> jax.Array:
         """Batched-weight einsum through the protected array.
 
-        Supports the MoE expert-matmul patterns (``becd,edf->becf`` and
-        ``becf,efd->becd``): each expert's matmul is one virtual-array
-        execution, vmapped over the expert axis via the two-pass engine path
-        (the fused kernel covers plain 2-D projections; batched expert
-        matmuls always use the engine until a batched kernel lands).
+        Supports the MoE expert-matmul patterns (:data:`EINSUM_SPECS`): each
+        expert's matmul is one virtual-array execution.  Under
+        ``dispatch="fused"`` the expert axis becomes the outermost kernel
+        grid dimension (``ft_matmul_batched``) — one launch for all experts —
+        or, on the ref backend, one clean einsum plus a broadcast fault
+        epilogue.  ``dispatch="twopass"`` vmaps the two-pass engine over
+        experts.
+
+        The spec is validated *first* (unsupported specs raise the same
+        clear error on every dispatch path, before any shape indexing).
         """
+        if spec not in EINSUM_SPECS:
+            raise ValueError(
+                f"FTContext.einsum supports the expert-matmul patterns "
+                f"{EINSUM_SPECS} only, got {spec!r}"
+            )
         if self._obs_record is not None:
             protected = self.protects(site) and self.dispatch != "plain"
             self._obs_record(
@@ -263,67 +281,153 @@ class FTContext:
             )
         if not self.protects(site) or self.dispatch == "plain":
             return jnp.einsum(spec, x, w)
-        if spec not in ("becd,edf->becf", "becf,efd->becd"):
-            raise ValueError(
-                f"FTContext.einsum supports the expert-matmul patterns only, got {spec!r}"
-            )
+        plan = self._plan_for(site)
+        if self.dispatch == "fused":
+            return self._fused_einsum(spec, x, w, plan, site=site).astype(x.dtype)
+        return self._einsum_twopass(spec, x, w, plan).astype(x.dtype)
+
+    def _einsum_twopass(self, spec: str, x, w, plan: RepairPlan | None):
         b, e, c, d = x.shape
         xe = x.transpose(1, 0, 2, 3).reshape(e, b * c, d)
-        state, cfg, plan = self.state, self.hyca, self._plan_for(site)
+        state, cfg = self.state, self.hyca
         out = jax.vmap(lambda xi, wi: hyca_matmul(xi, wi, state, cfg=cfg, plan=plan))(xe, w)
         n = w.shape[-1]
-        return out.reshape(e, b, c, n).transpose(1, 0, 2, 3).astype(x.dtype)
+        return out.reshape(e, b, c, n).transpose(1, 0, 2, 3)
 
     # ------------------------------------------------------------------ #
     # fused dispatch
     # ------------------------------------------------------------------ #
-    def _fused(self, x: jax.Array, w: jax.Array, plan: RepairPlan | None = None) -> jax.Array:
-        cfg = self.hyca
-        capacity = cfg.capacity if cfg.mode == "protected" else 0
-        if self.fused_backend == "ref":
-            # Non-TPU fallback: the engine's two-pass formula IS the fused
-            # kernel's element-granular semantics (corrupt-all + repaired
-            # overwrite ≡ corrupt where faulty & ~repaired), so delegating
-            # makes fused-vs-twopass bitwise identical by construction —
-            # not merely up to cross-program matmul rounding.
-            return hyca_matmul(x, w, self.state, cfg=cfg, plan=plan)
-        # Pallas kernel (compiled on TPU, interpret elsewhere): single fused
-        # pass — repaired tiles skip the fault mux at drain, so the DPPU
-        # recompute costs zero extra HBM traffic.  Tile→PE mapping is at
-        # (bm, bn) tile granularity; inputs are zero-padded to block
-        # multiples and the result sliced back.
-        from repro.kernels.ft_matmul import ft_matmul  # deferred: pallas import
+    def _block_for(self, m: int, n: int, k: int) -> tuple[int, int, int]:
+        if self.fused_block == "auto":
+            from repro.kernels.autotune import resolve_block
 
-        bm, bn, bk = self.fused_block
-        x2, lead = _as_2d(x)
-        m, k = x2.shape
-        n = w.shape[-1]
-        mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
-        xp = jnp.pad(x2.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
-        wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+            return resolve_block(m, n, k, dtype=jnp.float32, backend=self.fused_backend)
+        return self.fused_block
+
+    def _kernel_grids(self, plan: RepairPlan | None):
+        """Per-PE (bit, val, eff, prune) int32 grids for the kernel drain —
+        the unpacked form of ``engine.fault_meta_grid``, plan-gathered so the
+        RepairPlan costs the kernel nothing (an in-epilogue column view)."""
+        cfg = self.hyca
         bit, val, faulty = _pe_grids(self.state, cfg.rows, cfg.cols)
+        capacity = cfg.capacity if cfg.mode == "protected" else 0
         repaired = repaired_grid(self.state, cfg.rows, cfg.cols, capacity)
         if plan is not None:
-            # remap before the kernel: the kernel's grid inputs already ARE
-            # the channel-view grids, so a plan is just a column gather —
-            # no kernel change needed
             cm = plan.col_map
             bit, val, faulty = bit[:, cm], val[:, cm], faulty[:, cm]
             repaired = repaired[:, cm]
+            prune = plan.prune[:, cm].astype(jnp.int32)
+        else:
+            prune = jnp.zeros((cfg.rows, cfg.cols), jnp.int32)
+        eff = (faulty & ~repaired).astype(jnp.int32)
+        return bit, val, eff, prune
+
+    def _prune_mask(self, plan: RepairPlan | None, prune: jax.Array,
+                    bm: int, bn: int, mp: int, np_: int) -> jax.Array | None:
+        """Element-granular prune AND-mask for the kernel drain (the engine
+        zeroes pruned PEs per output ELEMENT, and the dispatch layer keeps
+        that placement at any block size).  A single periodic (bm, bn) tile
+        when the block is PE-aligned — broadcast to every grid cell, no
+        per-tile HBM traffic — else the full padded (mp, np_) mask."""
+        if plan is None:
+            return None
+        cfg = self.hyca
+        keep = jnp.where(prune > 0, jnp.int32(0), jnp.int32(-1))
+        if bm % cfg.rows == 0 and bn % cfg.cols == 0:
+            return jnp.tile(keep, (bm // cfg.rows, bn // cfg.cols))
+        return jnp.tile(keep, (-(-mp // cfg.rows), -(-np_ // cfg.cols)))[:mp, :np_]
+
+    def _record_fallback(self, site: str, reason: str) -> None:
+        from repro.obs.fallbacks import record_site_fallback  # deferred: obs←core
+
+        record_site_fallback(site, reason)
+
+    def _fused(self, x: jax.Array, w: jax.Array, plan: RepairPlan | None = None,
+               *, site: str = "?") -> jax.Array:
+        cfg = self.hyca
+        if self.fused_backend == "ref":
+            # Single-pass jnp formulation (non-TPU): the clean accumulate is
+            # the IDENTICAL matmul the unprotected path lowers (structural
+            # protected==off bit-exactness), and the whole fault story —
+            # stuck-at mux for effective faults, DPPU repair (= skipping the
+            # mux), plan remap and prune — collapses into one packed-meta
+            # gather + select chain over the output view
+            # (engine.fault_meta_grid / apply_fault_epilogue).  No
+            # corrupt-everything pass, no repair overwrite pass, no
+            # post-kernel prune pass: that is the fused win off-TPU.
+            pref = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+            out = jnp.matmul(x, w, preferred_element_type=pref)
+            meta = fault_meta_grid(self.state, cfg, plan)
+            shape = out.shape
+            out2 = out.reshape(-1, shape[-1])
+            return apply_fault_epilogue(out2, meta, cfg.rows, cfg.cols).reshape(shape)
+        # Pallas kernel (compiled on TPU, interpret elsewhere): single fused
+        # pass — repaired tiles skip the fault mux at drain, the RepairPlan's
+        # col_map is a pre-kernel gather of the tiny (rows, cols) grids and
+        # its element-granular prune mask zeroes inside the drain, so
+        # plan-active decode costs zero extra output-sized HBM passes.  The
+        # stuck-at mux is at (bm, bn) tile→PE granularity; inputs are
+        # zero-padded to block multiples and the result sliced back.
+        if jnp.issubdtype(x.dtype, jnp.integer) or jnp.issubdtype(w.dtype, jnp.integer):
+            # the kernel accumulates f32; int datapaths keep the engine's
+            # exact int32 stuck-at semantics via the two-pass path
+            self._record_fallback(site, "int-dtype-kernel")
+            return hyca_matmul(x, w, self.state, cfg=cfg, plan=plan)
+        from repro.kernels.ft_matmul import ft_matmul  # deferred: pallas import
+
+        x2, lead = _as_2d(x)
+        m, k = x2.shape
+        n = w.shape[-1]
+        bm, bn, bk = self._block_for(m, n, k)
+        mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+        xp = jnp.pad(x2.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+        wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+        bit, val, eff, prune = self._kernel_grids(plan)
         out = ft_matmul(
-            xp, wp, bit, val, faulty, repaired,
+            xp, wp, bit, val, eff, self._prune_mask(plan, prune, bm, bn, mp, np_),
             bm=bm, bn=bn, bk=bk, rows=cfg.rows, cols=cfg.cols,
             interpret=self.fused_backend == "interpret",
         )
-        out = out[:m, :n]
-        if plan is not None:
-            # pruning is outside the kernel's stuck-at vocabulary: overwrite
-            # the sacrificed PEs' output positions with zeros post-kernel
-            pv = plan.prune[:, plan.col_map]
-            pi = pv[jnp.arange(m)[:, None] % cfg.rows,
-                    jnp.arange(n)[None, :] % cfg.cols]
-            out = jnp.where(pi, jnp.zeros((), out.dtype), out)
-        return out.reshape(*lead, n)
+        return out[:m, :n].reshape(*lead, n)
+
+    def _fused_einsum(self, spec: str, x, w, plan: RepairPlan | None, *, site: str):
+        cfg = self.hyca
+        b, e, c, d = x.shape
+        n = w.shape[-1]
+        if self.fused_backend == "ref":
+            # One clean einsum (bitwise the plain path's accumulate — each
+            # expert's dot is unchanged) + ONE broadcast fault epilogue: the
+            # per-expert output view is (b·c, n) with row index bi·c + ci, so
+            # a (b, 1, c, 1) row-residue grid lets a single packed-meta
+            # gather cover every expert.  Replaces the vmapped two-pass
+            # engine (corrupt + overwrite + prune per expert).
+            pref = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+            out = jnp.einsum(spec, x, w, preferred_element_type=pref)
+            meta = fault_meta_grid(self.state, cfg, plan)
+            row_res = (
+                (jnp.arange(b)[:, None] * c + jnp.arange(c)[None, :]) % cfg.rows
+            )[:, None, :, None]
+            return apply_fault_epilogue(out, meta, cfg.rows, cfg.cols, row_residue=row_res)
+        if jnp.issubdtype(x.dtype, jnp.integer) or jnp.issubdtype(w.dtype, jnp.integer):
+            self._record_fallback(site, "int-dtype-kernel")
+            return self._einsum_twopass(spec, x, w, plan)
+        # expert axis → outermost kernel grid dimension: ONE launch for all
+        # experts instead of a vmapped two-pass pipeline per expert
+        from repro.kernels.ft_matmul import ft_matmul_batched  # deferred: pallas import
+
+        xe = x.transpose(1, 0, 2, 3).reshape(e, b * c, d)
+        m, kdim = b * c, d
+        bm, bn, bk = self._block_for(m, n, kdim)
+        mp, kp, np_ = -(-m // bm) * bm, -(-kdim // bk) * bk, -(-n // bn) * bn
+        xp = jnp.pad(xe.astype(jnp.float32), ((0, 0), (0, mp - m), (0, kp - kdim)))
+        wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, kp - kdim), (0, np_ - n)))
+        bit, val, eff, prune = self._kernel_grids(plan)
+        out = ft_matmul_batched(
+            xp, wp, bit, val, eff, self._prune_mask(plan, prune, bm, bn, mp, np_),
+            bm=bm, bn=bn, bk=bk, rows=cfg.rows, cols=cfg.cols,
+            interpret=self.fused_backend == "interpret",
+        )
+        return out[:, :m, :n].reshape(e, b, c, n).transpose(1, 0, 2, 3)
 
 
 def build_ftcontext(
@@ -332,16 +436,25 @@ def build_ftcontext(
     *,
     policy: ProtectPolicy | None = None,
     dispatch: str = "twopass",
-    fused_block: tuple[int, int, int] = (128, 128, 128),
+    fused_block: tuple[int, int, int] | str = "auto",
     plan=None,
+    autotune_shapes=None,
 ) -> FTContext:
     """Build an :class:`FTContext`, choosing the fused backend **once**.
 
     On a TPU backend the fused dispatch lowers the compiled Pallas kernel;
-    everywhere else it falls back to the pure-jnp oracle (element-granular,
-    bit-identical to the two-pass engine semantics).  Pass
-    ``dispatch="fused"`` + a non-TPU backend and you still get full fault
-    semantics — just without the single-pass HBM win the kernel buys on TPU.
+    everywhere else it lowers the single-pass jnp formulation (element-
+    granular, bit-identical to the two-pass engine semantics — and, unlike
+    the engine, ONE output pass).  Pass ``dispatch="fused"`` + a non-TPU
+    backend and you get full fault semantics plus most of the fused win.
+
+    ``fused_block="auto"`` (the default) resolves kernel blocks per call
+    shape through the persisted autotune cache
+    (``experiments/autotune/ft_matmul.json``, loaded here once per process;
+    see docs/kernels.md); an explicit ``(bm, bn, bk)`` is validated against
+    the backend's tile constraints now — a clear build-time error instead of
+    a Pallas lowering failure at first trace.  ``autotune_shapes`` optionally
+    runs the measured search for a list of ``(m, n, k)`` shapes at build.
 
     Host-side :func:`~repro.core.engine.validate_fault_state` runs here: FPT
     entries outside the (rows, cols) array geometry raise immediately instead
@@ -355,6 +468,18 @@ def build_ftcontext(
         for p in (plan.values() if isinstance(plan, dict) else (plan,)):
             validate_repair_plan(p, hyca.rows, hyca.cols)
     backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    from repro.kernels import autotune  # deferred: keeps core import-light
+
+    if fused_block == "auto":
+        autotune.load_cache()  # warm the persisted cache once per process
+        if autotune_shapes:
+            kernel_backend = "pallas" if backend == "pallas" else "interpret"
+            for m, n, k in autotune_shapes:
+                autotune.autotune_block(int(m), int(n), int(k),
+                                        backend=kernel_backend,
+                                        rows=hyca.rows, cols=hyca.cols)
+    else:
+        fused_block = autotune.validate_fused_block(fused_block, backend=backend)
     return FTContext(
         state=state,
         hyca=hyca,

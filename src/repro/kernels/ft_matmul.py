@@ -1,4 +1,4 @@
-"""Fused fault-tolerant matmul — the beyond-paper kernel.
+"""Fused fault-tolerant matmul — the beyond-paper kernel family.
 
 The paper's pipeline is two-pass: (1) the faulty array writes its (partly
 corrupted) outputs to the output buffer, (2) the DPPU recomputes faulty tiles
@@ -13,11 +13,41 @@ fault-injection mux.  One kernel, one HBM write per tile, zero scatter:
     healthy tile            -> clean accumulate, clean drain
     faulty & repaired tile  -> clean accumulate, clean drain  (DPPU semantics)
     faulty & unrepaired     -> stuck-at applied at drain      (degraded array)
+    pruned (RepairPlan)     -> zero at drain                  (plan epilogue)
 
-This preserves the paper's data semantics bit-exactly (property-tested against
-``ref.ft_matmul_ref`` and against os_array_matmul + dppu_recompute composed)
-while removing 2·F·bm·bn·4 B of HBM traffic per protected matmul.  EXPERIMENTS
-§Perf quantifies the win.
+The kernel consumes *pre-resolved* per-PE metadata: ``pe_eff`` is
+``faulty & ~repaired`` (the only case that leaves the fault in), already
+gathered through the RepairPlan's ``col_map`` by the caller — so a plan's
+remap costs nothing at run time.  The stuck-at mux is applied at the kernel
+family's (bm, bn) tile→PE granularity (the paper's per-element mapping is
+the ``bm = bn = 1`` special case, shared with ``os_array_matmul`` and the
+``ref`` oracles).
+
+Plan *pruning* is different: the engine zeroes pruned PEs' outputs at
+ELEMENT granularity (``out[i, j]`` → PE(i % rows, j % cols)), and the
+FTContext dispatch layer promises engine-identical prune placement at any
+block size.  The kernel therefore takes ``prune_mask`` — an int32 AND-mask
+(``-1`` keep, ``0`` zero: bit pattern 0 IS +0.0) applied to the f32
+accumulator's bits at drain.  Because the PE mapping is periodic, a single
+``(bm, bn)`` mask tile suffices whenever ``bm % rows == 0 and
+bn % cols == 0`` (it is fetched once and reused by every grid cell —
+constant index map); otherwise the caller passes the full padded ``(m, n)``
+mask and each cell reads its own block.  Either way the prune lands in the
+drain — no post-kernel gather/overwrite pass over the output.
+
+Two grid layouts share the drain epilogue:
+
+  * :func:`ft_matmul` — 2-D ``(M, K) @ (K, N)``; leading dims of N-D inputs
+    are collapsed into M by the caller;
+  * :func:`ft_matmul_batched` — per-expert ``(E, M, K) @ (E, K, N)`` with the
+    expert axis as the outermost grid dimension, so MoE expert matmuls run as
+    ONE kernel launch instead of falling back to the two-pass engine.
+
+This preserves the paper's data semantics (property-tested against
+``ref.ft_matmul_ref`` and, at ``bm = bn = 1``, bit-exactly against the
+element-granular ``engine.hyca_matmul``) while removing 2·F·bm·bn·4 B of HBM
+traffic per protected matmul.  Block sizes come from the autotuner
+(``kernels.autotune``) when the context is built with ``fused_block="auto"``.
 """
 from __future__ import annotations
 
@@ -31,7 +61,28 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.os_array_matmul import _stuck_at
 
 
-def _kernel(x_ref, w_ref, bit_ref, val_ref, eff_ref, o_ref, acc_ref):
+def _drain_tile(acc, bit, val, eff, pmask):
+    """Shared drain epilogue: stuck-at mux for effective faults (tile
+    granularity), then the element-granular prune AND-mask."""
+    bad = _stuck_at(acc, bit, val)
+    out = jnp.where(eff > 0, bad, acc)
+    raw = jax.lax.bitcast_convert_type(out, jnp.int32)
+    return jax.lax.bitcast_convert_type(raw & pmask, jnp.float32)
+
+
+def _prune_spec(mask_shape, bm: int, bn: int, batched: bool):
+    """BlockSpec for the prune mask: a (bm, bn) periodic tile is broadcast
+    to every grid cell; a full (m, n) mask is read per-tile."""
+    if batched:
+        if mask_shape == (bm, bn):
+            return pl.BlockSpec((bm, bn), lambda b, i, j, k: (0, 0))
+        return pl.BlockSpec((bm, bn), lambda b, i, j, k: (i, j))
+    if mask_shape == (bm, bn):
+        return pl.BlockSpec((bm, bn), lambda i, j, k: (0, 0))
+    return pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+
+
+def _kernel(x_ref, w_ref, bit_ref, val_ref, eff_ref, pmask_ref, o_ref, acc_ref):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -46,10 +97,23 @@ def _kernel(x_ref, w_ref, bit_ref, val_ref, eff_ref, o_ref, acc_ref):
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _drain():
-        acc = acc_ref[...]
-        bad = _stuck_at(acc, bit_ref[0, 0], val_ref[0, 0])
-        # eff == faulty & ~repaired: the only case that leaves the fault in.
-        o_ref[...] = jnp.where(eff_ref[0, 0] > 0, bad, acc)
+        o_ref[...] = _drain_tile(
+            acc_ref[...], bit_ref[0, 0], val_ref[0, 0], eff_ref[0, 0],
+            pmask_ref[...],
+        )
+
+
+def _tile_meta(grid_m: int, grid_n: int, rows: int, cols: int, *grids):
+    """AGU: pre-gather (rows, cols) per-PE metadata to kernel-grid shape so
+    each grid cell reads its own (1, 1) SMEM block — no dynamic indexing in
+    the kernel body."""
+    ti = jnp.arange(grid_m) % rows
+    tj = jnp.arange(grid_n) % cols
+    return tuple(g[ti[:, None], tj[None, :]].astype(jnp.int32) for g in grids)
+
+
+def _keep_all(bm: int, bn: int) -> jax.Array:
+    return jnp.full((bm, bn), -1, jnp.int32)
 
 
 @functools.partial(
@@ -60,8 +124,8 @@ def ft_matmul(
     w: jax.Array,
     pe_bit: jax.Array,
     pe_val: jax.Array,
-    pe_faulty: jax.Array,
-    pe_repaired: jax.Array,
+    pe_eff: jax.Array,
+    prune_mask: jax.Array | None = None,
     *,
     bm: int = 128,
     bn: int = 128,
@@ -70,19 +134,19 @@ def ft_matmul(
     cols: int = 32,
     interpret: bool = False,
 ) -> jax.Array:
+    """Single-pass protected matmul.  ``pe_eff`` = faulty & ~repaired, a
+    (rows, cols) grid already plan-gathered by the caller; ``prune_mask`` is
+    an int32 AND-mask of shape (bm, bn) (periodic tile) or (m, n), or None
+    for no pruning."""
     m, kdim = x.shape
     _, n = w.shape
     assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
     gm, gn, gk = m // bm, n // bn, kdim // bk
 
-    ti = jnp.arange(gm) % rows
-    tj = jnp.arange(gn) % cols
-    bit = pe_bit[ti[:, None], tj[None, :]].astype(jnp.int32)
-    val = pe_val[ti[:, None], tj[None, :]].astype(jnp.int32)
-    eff = (
-        pe_faulty[ti[:, None], tj[None, :]].astype(bool)
-        & ~pe_repaired[ti[:, None], tj[None, :]].astype(bool)
-    ).astype(jnp.int32)
+    bit, val, eff = _tile_meta(gm, gn, rows, cols, pe_bit, pe_val, pe_eff)
+    if prune_mask is None:
+        prune_mask = _keep_all(bm, bn)
+    assert prune_mask.shape in ((bm, bn), (m, n))
 
     meta_spec = pl.BlockSpec((1, 1), lambda i, j, k: (i, j), memory_space=pltpu.SMEM)
     return pl.pallas_call(
@@ -94,9 +158,83 @@ def ft_matmul(
             meta_spec,
             meta_spec,
             meta_spec,
+            _prune_spec(prune_mask.shape, bm, bn, batched=False),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, w, bit, val, eff)
+    )(x, w, bit, val, eff, prune_mask)
+
+
+def _kernel_batched(x_ref, w_ref, bit_ref, val_ref, eff_ref, pmask_ref, o_ref, acc_ref):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0].astype(jnp.float32),
+        w_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(3) - 1)
+    def _drain():
+        o_ref[0] = _drain_tile(
+            acc_ref[...], bit_ref[0, 0], val_ref[0, 0], eff_ref[0, 0],
+            pmask_ref[...],
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "rows", "cols", "interpret")
+)
+def ft_matmul_batched(
+    x: jax.Array,
+    w: jax.Array,
+    pe_bit: jax.Array,
+    pe_val: jax.Array,
+    pe_eff: jax.Array,
+    prune_mask: jax.Array | None = None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    rows: int = 32,
+    cols: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched-weight protected matmul: ``x (E, M, K) @ w (E, K, N)`` with the
+    expert axis as the outermost grid dimension — the MoE expert-matmul path.
+    Every expert runs on the same virtual PE array (each expert's matmul is
+    one virtual-array execution, so the tile→PE map — and the prune mask —
+    repeats per expert)."""
+    e, m, kdim = x.shape
+    _, _, n = w.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+    gm, gn, gk = m // bm, n // bn, kdim // bk
+
+    bit, val, eff = _tile_meta(gm, gn, rows, cols, pe_bit, pe_val, pe_eff)
+    if prune_mask is None:
+        prune_mask = _keep_all(bm, bn)
+    assert prune_mask.shape in ((bm, bn), (m, n))
+
+    meta_spec = pl.BlockSpec((1, 1), lambda b, i, j, k: (i, j), memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        _kernel_batched,
+        grid=(e, gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda b, i, j, k: (b, k, j)),
+            meta_spec,
+            meta_spec,
+            meta_spec,
+            _prune_spec(prune_mask.shape, bm, bn, batched=True),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, bit, val, eff, prune_mask)

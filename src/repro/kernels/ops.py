@@ -106,8 +106,9 @@ def hyca_protected_matmul_fused(
 ):
     """Beyond-paper single-pass fused kernel (see ft_matmul.py)."""
     bit, val, faulty, repaired = fault_grids(state, cfg.rows, cfg.cols, cfg.capacity)
+    eff = (faulty & ~repaired).astype(jnp.int32)
     return ft_matmul(
-        x, w, bit, val, faulty, repaired, bm=bm, bn=bn, bk=bk, rows=cfg.rows,
+        x, w, bit, val, eff, bm=bm, bn=bn, bk=bk, rows=cfg.rows,
         cols=cfg.cols, interpret=_interp(interpret),
     )
 

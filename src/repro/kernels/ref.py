@@ -87,12 +87,21 @@ def ft_matmul_ref(
     *,
     bm: int,
     bn: int,
+    pe_prune: jax.Array | None = None,
 ) -> jax.Array:
     """Fused fault-tolerant matmul oracle: healthy/repaired tiles exact,
-    faulty-unrepaired tiles stuck-at-corrupted."""
+    faulty-unrepaired tiles stuck-at-corrupted at tile→PE granularity, and
+    pruned PEs zeroed at ELEMENT granularity — the in-kernel RepairPlan
+    epilogue, whose prune mask follows the engine's per-element
+    ``out[i, j] -> PE(i % rows, j % cols)`` placement at any block size."""
     m, n = x.shape[0], w.shape[1]
     rows, cols = pe_faulty.shape
     out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
     gi, gj = _tile_grids(m, n, bm, bn, rows, cols)
     eff_faulty = pe_faulty & ~pe_repaired
-    return corrupt_f32(out, pe_bit[gi, gj], pe_val[gi, gj], eff_faulty[gi, gj])
+    out = corrupt_f32(out, pe_bit[gi, gj], pe_val[gi, gj], eff_faulty[gi, gj])
+    if pe_prune is not None:
+        ei = (jnp.arange(m) % rows)[:, None]
+        ej = (jnp.arange(n) % cols)[None, :]
+        out = jnp.where(pe_prune[ei, ej], jnp.zeros_like(out), out)
+    return out

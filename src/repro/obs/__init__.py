@@ -33,6 +33,12 @@ from repro.obs.events import (  # noqa: F401
     repair_records,
 )
 from repro.obs.export import prometheus_text, write_metrics_out  # noqa: F401
+from repro.obs.fallbacks import (  # noqa: F401
+    fallback_summary,
+    record_site_fallback,
+    reset_site_fallbacks,
+    site_fallback_total,
+)
 
 
 def __getattr__(name):

@@ -59,6 +59,11 @@ def write_metrics_out(path: str, summary: dict, log=None, *,
     ``path`` (empty file when no log) and the summary as Prometheus text at
     ``path + ".prom"``.  Parent directories are created.  Returns the two
     paths."""
+    from repro.obs.fallbacks import fallback_summary
+
+    fallbacks = fallback_summary()
+    if fallbacks and "site_fallback_total" not in summary:
+        summary = {**summary, "site_fallback_total": fallbacks}
     parent = os.path.dirname(os.path.abspath(path))
     os.makedirs(parent, exist_ok=True)
     if log is not None:
