@@ -59,6 +59,13 @@ BUDGETS: tuple[Budget, ...] = (
            key=("arch", "site"), records="site_results"),
     Budget("scan_latency", "step_ms", 2.5, key=("rows", "cols", "scan_block")),
     Budget("scan_latency", "boot_batched_ms", 2.5, key=("rows", "cols", "scan_block")),
+    # fleet_goodput: goodput is deterministic per seed, so the floor is a
+    # semantics tripwire (an engine change that silently sheds served tokens),
+    # while sim_wall_s is raw wall clock of the jitted fleet sweep — widest
+    # budget, like step_ms above.  The quick-size rows are always emitted, so
+    # quick CI runs pair with the committed full-run baseline.
+    Budget("fleet_goodput", "goodput_tokens", 1.25, key=("fleet",), min_ratio=0.8),
+    Budget("fleet_goodput", "sim_wall_s", 3.0, key=("fleet",)),
 )
 
 

@@ -22,6 +22,7 @@ def main(argv=None) -> int:
         campaign,
         cluster_ffp,
         fig02_accuracy_vs_per,
+        fleet_goodput,
         ft_overhead,
         fig03_motivation_ffp,
         fig09_area,
@@ -51,6 +52,7 @@ def main(argv=None) -> int:
         "tab01_detection": tab01_detection.run,
         "cluster_ffp": cluster_ffp.run,
         "serving_goodput": serving_goodput.run,
+        "fleet_goodput": fleet_goodput.run,
         "ft_overhead": ft_overhead.run,
         "scan_latency": scan_latency.run,
         # repair_recovery.run persists under experiments/bench/repair.json

@@ -689,9 +689,32 @@ def chaos_maps(spec: ChaosSpec, n: int, rows: int, cols: int) -> np.ndarray:
     return fm.sample_fault_maps(rng, n, rows, cols, spec.per, spec.fault_model)  # type: ignore[arg-type]
 
 
-def apply_chaos(injector, fault_map: np.ndarray) -> int:
+def chaos_signatures(spec: ChaosSpec, n: int, rows: int, cols: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """(n, rows, cols) stuck-bit / stuck-val grids for chaos injection,
+    sampled from the *spec* seed rather than each injector's private RNG.
+    Both fleet engines draw the same signatures for the same spec, which is
+    what makes the legacy-vs-vectorized chaos outcome parity exact (probe
+    detectability depends on the stuck bit)."""
+    rng = np.random.default_rng([spec.seed, 0xC11A05])
+    bits = rng.integers(0, 32, size=(n, rows, cols), dtype=np.int32)
+    vals = rng.integers(0, 2, size=(n, rows, cols), dtype=np.int32)
+    return bits, vals
+
+
+def apply_chaos(injector, fault_map: np.ndarray, *,
+                bits: np.ndarray | None = None,
+                vals: np.ndarray | None = None) -> int:
     """Merge a sampled map into a FaultInjector's ground truth; returns the
-    number of NEW faults (already-faulty PEs are unchanged)."""
+    number of NEW faults (already-faulty PEs are unchanged).  With ``bits``/
+    ``vals`` (one :func:`chaos_signatures` slice), stuck-at signatures are
+    taken from the spec-seeded grids instead of the injector's RNG."""
     before = injector.n_faults
-    injector.inject_map(np.asarray(fault_map, bool))
+    m = np.asarray(fault_map, bool)
+    if bits is None or vals is None:
+        injector.inject_map(m)
+    else:
+        for r, c in np.argwhere(m):
+            injector.inject_at(int(r), int(c),
+                               bit=int(bits[r, c]), val=int(vals[r, c]))
     return injector.n_faults - before

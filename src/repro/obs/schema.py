@@ -30,6 +30,9 @@ KIND_SCHEMAS: dict[str, dict[str, tuple[type, ...]]] = {
     "scan.boot": {"sweeps": (int,), "confirmed": (int,)},
     "scan.bist": {"confirmed": (int,)},
     "chaos.injected": {"n": (int,)},
+    "fleet.autoscale": {"action": (str,), "n": (int,),
+                        "queue_depth_mean": (float, int),
+                        "capacity_mean": (float, int), "live": (int,)},
     "repair.plan": {"mode": (str,), "n_remapped": (int,), "remapped_cols": (list,),
                     "quality_fraction": (float, int), "retrained": (bool,)},
     "train.step": {"loss": (float, int), "lr": (float, int),

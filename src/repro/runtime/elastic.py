@@ -87,6 +87,23 @@ def plan_remesh(
     )
 
 
+def initial_spares(n_spares: int, policy: str, n_regions: int = 1) -> np.ndarray:
+    """The canonical spare split as a per-region vector.
+
+    ``pool`` keeps every spare in one global bucket (``[n_spares]``);
+    ``region`` pins ``n_spares // n_regions`` per region (integer division —
+    the remainder is deliberately *lost*, mirroring real region-locked
+    provisioning waste).  Single source of the split rule: both the
+    event-driven :class:`SparePool` and the vectorized fleet engine's
+    integer-lax spare accounting (``repro.serving.vfleet``) start from this
+    vector, so their allocation outcomes agree by construction."""
+    if policy == "pool":
+        return np.array([n_spares], dtype=np.int32)
+    if policy == "region":
+        return np.full(n_regions, n_spares // n_regions, dtype=np.int32)
+    raise ValueError(policy)
+
+
 @dataclasses.dataclass
 class SparePool:
     """Event-driven spare allocation — the same dichotomy as
@@ -107,7 +124,8 @@ class SparePool:
         if self.policy not in ("pool", "region"):
             raise ValueError(self.policy)
         if self.policy == "region":
-            self._per_region = [self.n_spares // self.n_regions] * self.n_regions
+            self._per_region = list(initial_spares(self.n_spares, self.policy,
+                                                   self.n_regions))
         self._taken = 0
 
     @property

@@ -23,6 +23,14 @@ from repro.core.campaign import ChaosSpec  # noqa: F401  (chaos-injection hook)
 from repro.obs.events import EventLog  # noqa: F401  (per-server fault tracing)
 from repro.serving.fleet import FleetConfig, run_fleet  # noqa: F401
 from repro.serving.metrics import ServingMetrics, StepRecord  # noqa: F401
+from repro.serving.traffic import (  # noqa: F401
+    RequestClass,
+    Trace,
+    TrafficSpec,
+    request_classes,
+    sample_trace,
+)
+from repro.serving.vfleet import AutoscaleSpec, run_vfleet  # noqa: F401
 from repro.serving.queue import CompletedRequest, Request, RequestQueue  # noqa: F401
 from repro.serving.scheduler import ContinuousBatchingScheduler, Slot  # noqa: F401
 from repro.serving.server import FaultTolerantServer, ModelBundle, ServerConfig  # noqa: F401

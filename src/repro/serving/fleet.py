@@ -19,12 +19,13 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.campaign import ChaosSpec, apply_chaos, chaos_maps
+from repro.core.campaign import ChaosSpec, apply_chaos, chaos_maps, chaos_signatures
 from repro.obs.events import detection_records, latency_summary
 from repro.runtime.elastic import SparePool
 from repro.serving.fault_manager import FaultInjector
 from repro.serving.queue import Request
 from repro.serving.server import FaultTolerantServer, ModelBundle, ServerConfig
+from repro.serving.traffic import TrafficSpec, requests_at, sample_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +46,18 @@ class FleetConfig:
     # (no bist); the ScanEngine probes must find the faults, which is the
     # detection-latency-under-burst measurement this hook exists for
     chaos: ChaosSpec | None = None
+    # trace-driven load (serving/traffic.py): when set, arrivals come from a
+    # spec-seeded per-step per-class schedule instead of the live-count
+    # Poisson above — the SAME schedule both engines consume, which is what
+    # makes legacy-vs-vectorized outcome parity exact.  request_rate/
+    # prompt_len/max_new_tokens above are ignored in favour of the spec.
+    traffic: TrafficSpec | None = None
+    # vectorized-engine knobs (run_vfleet; ignored by the legacy loop):
+    # queue-age histogram resolution, jitted segment length (also the
+    # autoscale decision cadence), and the optional autoscaling policy
+    age_bins: int = 64
+    chunk_steps: int = 32
+    autoscale: "object | None" = None  # AutoscaleSpec (serving/vfleet.py)
     # scan_block=2: the batched ScanEngine sweeps the default 8x8 array every
     # 4 steps — background scanning is cheap enough (one jitted row-block
     # probe per step) to leave on fleet-wide
@@ -72,6 +85,32 @@ def _fresh_server(bundle: ModelBundle, cfg: FleetConfig, seed: int) -> FaultTole
 
 
 def run_fleet(cfg: FleetConfig) -> dict:
+    """Drive the fleet for ``cfg.steps`` and return the fleet report dict.
+
+    **Telemetry semantics — every total is fleet-LIFETIME**: ``retirements``,
+    ``replacements``, ``repair_events``, ``remapped_total``, ``requests_*``
+    and the SLO counts all include work done by servers that were later
+    retired and replaced from the spare pool (a replacement swaps the server
+    object, so lifetime totals are accumulated at swap time).  Only the
+    ``replica_summaries`` rows describe the *current* server in each replica
+    position.  Further keys:
+
+    * ``goodput_tokens`` — decode tokens generated fleet-wide (lifetime);
+      ``goodput_per_step`` is its per-step mean.
+    * ``requests_lost`` — in-flight requests that died with a retiring
+      replica, plus queued requests stranded when no spare was available.
+    * ``requests_unrouted`` — arrivals while NO replica was live (dropped at
+      routing; counted separately from per-replica losses).
+    * ``slo_requests/slo_met/slo_misses/slo_attainment`` — requests that
+      carried an SLA deadline: met iff successfully finished by the
+      deadline; expired/dropped/late completions AND deadline-carrying
+      requests lost at retirement are misses.  ``slo_attainment`` is None
+      when no request carried a deadline.
+
+    With ``cfg.traffic`` set, arrivals follow the spec-seeded trace
+    (identical for the vectorized engine — see serving/traffic.py);
+    otherwise the legacy live-count Poisson arrival process runs.
+    """
     rng = np.random.default_rng(cfg.seed)
     bundle = ModelBundle(dataclasses.replace(cfg.server, fault_rate=cfg.fault_rate))
     pool = SparePool(cfg.n_spares, policy=cfg.spare_policy, n_regions=cfg.n_regions)
@@ -90,12 +129,49 @@ def run_fleet(cfg: FleetConfig) -> dict:
     retirements = 0
     replacements = 0
     requests_lost = 0
+    requests_unrouted = 0
+
+    # lifetime accumulators: harvested from a server at replacement time so
+    # spare swaps don't erase its history (the old remapped_total only
+    # counted non-retired replicas — inconsistent with the other totals)
+    acc_remapped = 0
+    acc_repair_events = 0
+    acc_repair_log: list[dict] = []
+    acc_slo_requests = 0
+    acc_slo_met = 0
+    acc_completed = 0
+    acc_expired = 0
+    lost_with_deadline = 0
+
+    def _harvest(i: int, server: FaultTolerantServer) -> None:
+        nonlocal acc_remapped, acc_repair_events, acc_slo_requests
+        nonlocal acc_slo_met, acc_completed, acc_expired
+        acc_remapped += server.manager.n_remapped
+        acc_repair_events += len(server.repair_events)
+        acc_repair_log.extend(dict(ev, replica=i) for ev in server.repair_events)
+        n_slo, n_met = server.metrics.slo_counts()
+        acc_slo_requests += n_slo
+        acc_slo_met += n_met
+        acc_completed += sum(1 for c in server.metrics.completions if c.ok)
+        acc_expired += sum(1 for c in server.metrics.completions
+                           if c.reason == "expired")
 
     chaos_injected = 0
-    chaos_batch = (
-        chaos_maps(cfg.chaos, cfg.n_replicas, cfg.server.rows, cfg.server.cols)
-        if cfg.chaos is not None else None
-    )
+    chaos_batch = chaos_bits = chaos_vals = None
+    if cfg.chaos is not None:
+        chaos_batch = chaos_maps(cfg.chaos, cfg.n_replicas,
+                                 cfg.server.rows, cfg.server.cols)
+        # signatures from the SPEC seed (not each injector's RNG) so the
+        # vectorized engine injects bit-identical faults — parity-critical
+        chaos_bits, chaos_vals = chaos_signatures(
+            cfg.chaos, cfg.n_replicas, cfg.server.rows, cfg.server.cols)
+
+    trace = None
+    trace_rng = None
+    if cfg.traffic is not None:
+        trace = sample_trace(cfg.traffic, cfg.steps, cfg.n_replicas,
+                             cfg.server.smax)
+        trace_rng = np.random.default_rng([cfg.traffic.seed, 0x7E1])
 
     for step in range(cfg.steps):
         if cfg.chaos is not None and step == cfg.chaos.at_step:
@@ -104,25 +180,33 @@ def run_fleet(cfg: FleetConfig) -> dict:
                     # stamp the event-log cursor so the fault.injected events
                     # carry the chaos step — detection latency is then exact
                     replicas[i].server.log.step = step
-                    n = apply_chaos(replicas[i].server.injector, chaos_batch[i])
+                    n = apply_chaos(replicas[i].server.injector, chaos_batch[i],
+                                    bits=chaos_bits[i], vals=chaos_vals[i])
                     chaos_injected += n
                     replicas[i].server.log.emit("chaos.injected", n=n)
         # arrivals: least-loaded routing over live replicas
         live = [r for r in replicas if r.retired_at is None]
-        n_new = int(rng.poisson(cfg.request_rate * max(len(live), 1)))
-        for _ in range(n_new):
+        if trace is not None:
+            new_reqs, next_rid = requests_at(trace, step, trace_rng, vocab, next_rid)
+        else:
+            n_new = int(rng.poisson(cfg.request_rate * max(len(live), 1)))
+            new_reqs = []
+            for _ in range(n_new):
+                prompt = rng.integers(0, vocab, size=cfg.prompt_len).astype(np.int32)
+                new_reqs.append(Request(
+                    rid=next_rid, prompt=prompt,
+                    max_new_tokens=cfg.max_new_tokens, arrival_step=step,
+                ))
+                next_rid += 1
+        for req in new_reqs:
             if not live:
-                break
+                requests_unrouted += 1
+                continue
             target = min(live, key=lambda r: r.server.queue.depth() + r.server.scheduler.active)
-            prompt = rng.integers(0, vocab, size=cfg.prompt_len).astype(np.int32)
-            target.server.queue.submit(Request(
-                rid=next_rid, prompt=prompt, max_new_tokens=cfg.max_new_tokens,
-                arrival_step=step,
-            ))
-            next_rid += 1
+            target.server.queue.submit(req)
 
         tokens = 0
-        for rep in replicas:
+        for i, rep in enumerate(replicas):
             if rep.retired_at is not None:
                 continue
             rep.server.step()
@@ -134,11 +218,21 @@ def run_fleet(cfg: FleetConfig) -> dict:
                 # in-flight work dies with the replica; queued work survives
                 # iff a spare takes over and the requests are re-routed
                 requests_lost += rep.server.scheduler.active
+                lost_with_deadline += sum(
+                    1 for s in rep.server.scheduler.slots
+                    if not s.free and s.request.deadline_step is not None
+                )
                 stranded = rep.server.queue.drain_all()
                 if pool.try_allocate(rep.region):
+                    _harvest(i, rep.server)  # lifetime totals survive the swap
                     rep.server = _fresh_server(
                         bundle, cfg, seed=cfg.seed * 1000 + 500 + replacements
                     )
+                    # the replacement inherits the FLEET clock: request
+                    # deadlines are absolute fleet steps, so a server whose
+                    # step_idx restarted at 0 would judge expiry (and stamp
+                    # completions) ~step_idx steps in the past
+                    rep.server.step_idx = step + 1
                     for req in stranded:
                         rep.server.queue.submit(req)
                     rep.retired_at = None
@@ -146,11 +240,18 @@ def run_fleet(cfg: FleetConfig) -> dict:
                     replacements += 1
                 else:
                     requests_lost += len(stranded)
+                    lost_with_deadline += sum(
+                        1 for req in stranded if req.deadline_step is not None
+                    )
         goodput_per_step.append(tokens)
         alive_per_step.append(sum(r.retired_at is None for r in replicas))
 
-    for rep in replicas:
+    for i, rep in enumerate(replicas):
         rep.server.metrics.finish()
+        _harvest(i, rep.server)
+
+    slo_requests = acc_slo_requests + lost_with_deadline
+    slo_met = acc_slo_met
 
     # fleet-level detection latency: merge every replica's event log (chaos
     # injections above stamp exact injection steps, so these are measured)
@@ -175,19 +276,23 @@ def run_fleet(cfg: FleetConfig) -> dict:
         "chaos_at_step": cfg.chaos.at_step if cfg.chaos is not None else None,
         "retirements": retirements,
         "replacements": replacements,
-        "remapped_total": sum(
-            r.server.manager.n_remapped for r in replicas if r.retired_at is None
-        ),
-        "repair_events": sum(len(r.server.repair_events) for r in replicas),
+        # lifetime totals: include servers consumed by spare replacement, not
+        # just the current occupant of each replica position
+        "remapped_total": acc_remapped,
+        "repair_events": acc_repair_events,
         # full repair-hook telemetry, tagged by replica position (satellite of
         # docs/observability.md: what was remapped, where, at what quality)
-        "repair_event_log": [
-            dict(ev, replica=i)
-            for i, r in enumerate(replicas)
-            for ev in r.server.repair_events
-        ],
+        "repair_event_log": acc_repair_log,
+        "requests_completed": acc_completed,
+        "requests_expired": acc_expired,
         "requests_lost": requests_lost,
+        "requests_unrouted": requests_unrouted,
+        "slo_requests": slo_requests,
+        "slo_met": slo_met,
+        "slo_misses": slo_requests - slo_met,
+        "slo_attainment": (slo_met / slo_requests) if slo_requests else None,
         "spares_remaining": pool.remaining,
+        "engine": "legacy",
         "scan_steps_total": sum(r.server.manager.scans for r in replicas),
         "scan_steps_per_sweep": replicas[0].server.manager.steps_per_sweep
         if replicas else 0,

@@ -93,6 +93,17 @@ class ServingMetrics:
             total += int(len(c.tokens))
         return total
 
+    def slo_counts(self) -> tuple[int, int]:
+        """(requests that carried an SLA deadline, how many met it).
+
+        A deadline is *met* only by a successful completion finishing at or
+        before it — expired/dropped requests and late finishes are SLO
+        misses.  The fleet report folds per-replica counts (plus requests
+        lost at retirement) into a fleet-lifetime ``slo_attainment``."""
+        with_slo = [c for c in self.completions if c.deadline_step is not None]
+        met = sum(1 for c in with_slo if c.slo_met)
+        return len(with_slo), met
+
     def ttft_steps(self) -> list[int]:
         return [
             c.first_token_step - c.arrival_step
@@ -110,6 +121,7 @@ class ServingMetrics:
         n_pe_scans = len(scans)
         sweep = max(self.steps_per_sweep, 1)
         ok = [c for c in self.completions if c.ok]
+        slo_requests, slo_met = self.slo_counts()
         out = {
             "steps": n_steps,
             "wall_s": self.wall_s,
@@ -120,6 +132,13 @@ class ServingMetrics:
             "goodput_per_step": good / max(n_steps, 1),
             "requests_completed": len(ok),
             "requests_failed": len(self.completions) - len(ok),
+            "requests_expired": sum(1 for c in self.completions if c.reason == "expired"),
+            # SLA accounting: only requests that carried a deadline count;
+            # expired/dropped/late ones are misses (attainment None w/o SLAs)
+            "slo_requests": slo_requests,
+            "slo_met": slo_met,
+            "slo_misses": slo_requests - slo_met,
+            "slo_attainment": (slo_met / slo_requests) if slo_requests else None,
             "ttft_mean_steps": float(np.mean(ttft)) if ttft else None,
             "ttft_p95_steps": float(np.percentile(ttft, 95)) if ttft else None,
             "queue_depth_mean": float(np.mean([r.queue_depth for r in self.steps])) if self.steps else 0.0,

@@ -51,10 +51,19 @@ class CompletedRequest:
     first_token_step: int | None       # TTFT = first_token_step - arrival_step
     finish_step: int
     reason: str                        # "done" | "eos" | "expired" | "dropped"
+    deadline_step: int | None = None   # the request's SLA deadline, if any
 
     @property
     def ok(self) -> bool:
         return self.reason in ("done", "eos")
+
+    @property
+    def slo_met(self) -> bool | None:
+        """True/False for requests that carried an SLA deadline (finished
+        successfully by the deadline, or not); None without one."""
+        if self.deadline_step is None:
+            return None
+        return self.ok and self.finish_step <= self.deadline_step
 
 
 class RequestQueue:

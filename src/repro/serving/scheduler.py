@@ -104,6 +104,7 @@ class ContinuousBatchingScheduler:
             rid=req.rid, tokens=np.zeros(0, np.int32), prompt_len=req.prompt_len,
             arrival_step=req.arrival_step, admitted_step=None,
             first_token_step=None, finish_step=step, reason="dropped",
+            deadline_step=req.deadline_step,
         )
 
     # ------------------------------------------------------------------ #
@@ -161,6 +162,7 @@ class ContinuousBatchingScheduler:
             first_token_step=s.first_token_step,
             finish_step=step,
             reason=reason,
+            deadline_step=req.deadline_step,
         )
         s.reset()
         return out

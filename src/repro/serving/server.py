@@ -406,6 +406,7 @@ class FaultTolerantServer:
                 rid=req.rid, tokens=np.zeros(0, np.int32), prompt_len=req.prompt_len,
                 arrival_step=req.arrival_step, admitted_step=None,
                 first_token_step=None, finish_step=step, reason="expired",
+                deadline_step=req.deadline_step,
             ))
         for slot in admitted:
             self.cache = self.bundle.reset_fn(self.cache, jnp.int32(slot.index))
@@ -485,6 +486,7 @@ class FaultTolerantServer:
                     rid=req.rid, tokens=np.zeros(0, np.int32), prompt_len=req.prompt_len,
                     arrival_step=req.arrival_step, admitted_step=None,
                     first_token_step=None, finish_step=self.step_idx, reason="dropped",
+                    deadline_step=req.deadline_step,
                 ))
         self.metrics.finish()
         return self.metrics.summary(counters=self.counters_host())
