@@ -1,0 +1,114 @@
+"""Detector-coverage matrix: fault class × detector, with retrace evidence.
+
+The headline of the transient-fault stack (docs/faults.md): ABFT checksums
+catch the transient MAC and weight-memory bit flips the ScanEngine probe
+structurally cannot —
+
+  * ``scan`` sees a MAC transient only if the cursor happened to be probing
+    that row block at upset time (coverage ≈ scan_block/rows) and NEVER sees
+    a weight flip (probes supply their own operands);
+  * ``verify`` (output-block recompute) re-reads the stored — corrupted —
+    weights, so weight flips are invisible to it too;
+  * ``abft``'s carried column checksum flags MAC corruption anywhere in the
+    array every step, and the encode-time weight checksum
+    (:func:`repro.core.engine.abft_encode`) is the only detector of the
+    weight-memory class.
+
+The campaign (repro.transient.coverage) runs each fault class as ONE jitted
+vmapped program and re-runs it with a fresh config draw: the claims gate
+both the coverage separations AND that the second draw did not retrace —
+fault configs are data, same as PR 4's fault maps.
+
+CI: registered in benchmarks/run.py; the committed
+experiments/bench/detector_coverage.json baseline is gated by
+benchmarks/regress.py (coverage floors), so a detector silently losing a
+fault class hard-fails the obs-smoke lane.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import Claims, save_result
+from repro.transient.coverage import CoverageSpec, run_coverage
+
+
+def run(quick: bool = False) -> dict:
+    spec = CoverageSpec(n_configs=64 if quick else 256, seed=7)
+    rep = run_coverage(spec)
+    cov = {
+        (r["fault_class"], r["detector"]): r["coverage"] for r in rep["matrix"]
+    }
+    claims = Claims("detector_coverage")
+    claims.check(
+        "scan catches permanent stuck-ats (the PR-1..6 contract holds)",
+        cov[("permanent", "scan")] >= 0.9,
+        f"scan/permanent = {cov[('permanent', 'scan')]:.3f}",
+    )
+    claims.check(
+        "scan is structurally blind to weight-memory flips",
+        cov[("transient_weight", "scan")] == 0.0,
+        f"scan/transient_weight = {cov[('transient_weight', 'scan')]:.3f}",
+    )
+    claims.check(
+        "verify is structurally blind to weight-memory flips "
+        "(recomputes from the same stored weights)",
+        cov[("transient_weight", "verify")] == 0.0,
+        f"verify/transient_weight = {cov[('transient_weight', 'verify')]:.3f}",
+    )
+    claims.check(
+        "ABFT encode-time checksum catches weight flips nothing else sees",
+        cov[("transient_weight", "abft")] >= 0.5
+        and cov[("transient_weight", "abft")] >= cov[("transient_weight", "scan")] + 0.3,
+        f"abft/transient_weight = {cov[('transient_weight', 'abft')]:.3f}",
+    )
+    claims.check(
+        "ABFT beats the scan cursor on MAC transients (whole-array, every step)",
+        cov[("transient_mac", "abft")] >= cov[("transient_mac", "scan")] + 0.2,
+        f"abft {cov[('transient_mac', 'abft')]:.3f} vs "
+        f"scan {cov[('transient_mac', 'scan')]:.3f}",
+    )
+    claims.check(
+        "swapping fault configs through each class program retraces nothing",
+        all(n == 1 for n in rep["retraces"].values()),
+        f"traces per class: {rep['retraces']}",
+    )
+    return {
+        "backend": jax.default_backend(),
+        "spec": {
+            "rows": spec.rows, "cols": spec.cols,
+            "m": spec.m, "k": spec.k, "n": spec.n,
+            "n_configs": spec.n_configs, "scan_block": spec.scan_block,
+            "verify_rows": spec.verify_rows, "seed": spec.seed,
+        },
+        "matrix": rep["matrix"],
+        "retraces": rep["retraces"],
+        "claims": claims.items,
+        "all_ok": claims.all_ok,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="fewer configs (CI smoke)")
+    args = ap.parse_args(argv)
+    t0 = time.perf_counter()
+    out = run(quick=args.quick)
+    out["elapsed_s"] = round(time.perf_counter() - t0, 2)
+    path = save_result("detector_coverage", out)
+    for r in out["matrix"]:
+        print(
+            f"[detector_coverage] {r['fault_class']:17s} {r['detector']:7s}"
+            f" coverage {r['coverage']:.3f} ±{r['ci95']:.3f}"
+            f" (n_corrupted={r['n_corrupted']}/{r['n']})"
+        )
+    print(f"[detector_coverage] retraces: {out['retraces']} -> {path}")
+    return 0 if out["all_ok"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

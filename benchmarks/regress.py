@@ -66,6 +66,16 @@ BUDGETS: tuple[Budget, ...] = (
     # quick CI runs pair with the committed full-run baseline.
     Budget("fleet_goodput", "goodput_tokens", 1.25, key=("fleet",), min_ratio=0.8),
     Budget("fleet_goodput", "sim_wall_s", 3.0, key=("fleet",)),
+    # detector_coverage: coverage is a detection *rate* (higher is better) —
+    # the floor catches a detector silently losing a fault class.  Monte-
+    # Carlo draws differ between quick CI (64 configs) and the committed
+    # full run (256), so 0.8 leaves room for binomial noise while a real
+    # coverage collapse (e.g. ABFT losing the weight class: 1.0 -> 0.0)
+    # hard-fails.  Structurally-zero baseline cells (scan/transient_weight)
+    # are skipped by the non-positive-baseline rule — exactly right, since
+    # any current value >= 0 is fine there.
+    Budget("detector_coverage", "coverage", float("inf"),
+           key=("fault_class", "detector"), records="matrix", min_ratio=0.8),
 )
 
 

@@ -21,6 +21,7 @@ def main(argv=None) -> int:
     from benchmarks import (
         campaign,
         cluster_ffp,
+        detector_coverage,
         fig02_accuracy_vs_per,
         fleet_goodput,
         ft_overhead,
@@ -55,6 +56,7 @@ def main(argv=None) -> int:
         "fleet_goodput": fleet_goodput.run,
         "ft_overhead": ft_overhead.run,
         "scan_latency": scan_latency.run,
+        "detector_coverage": detector_coverage.run,
         # repair_recovery.run persists under experiments/bench/repair.json
         "repair": repair_recovery.run,
     }

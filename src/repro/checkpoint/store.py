@@ -128,6 +128,29 @@ def restore(ckpt_dir: str, step: int, like: Any, shardings: Any | None = None) -
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def corrupt_leaves(ckpt_dir: str, step: int) -> list[str]:
+    """Digest-check every leaf of ``step`` without loading it into a pytree:
+    returns the names whose on-disk bytes no longer match the manifest's
+    ``leaf_sha256`` (plus any leaf file that is simply missing).  This is the
+    *detection* half of the memory-fault story (repro.transient.memory):
+    ``restore`` refuses the first bad leaf it meets, while this scan names
+    ALL bad leaves so a guarded restore can re-fetch exactly those.  Pre-
+    digest manifests have nothing to check and return ``[]``."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = _verify(d)
+    digests = manifest.get("leaf_sha256", {})
+    bad = []
+    for name, expect in sorted(digests.items()):
+        fp = os.path.join(d, name + ".npy")
+        if not os.path.exists(fp):
+            bad.append(name)
+            continue
+        with open(fp, "rb") as lf:
+            if hashlib.sha256(lf.read()).hexdigest() != expect:
+                bad.append(name)
+    return bad
+
+
 def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None

@@ -623,6 +623,34 @@ def take_config(states: FaultState, i: int) -> FaultState:
     return FaultState(states.fpt[i], states.stuck_bit[i], states.stuck_val[i])
 
 
+def batched_single_fault_states(
+    rng: np.random.Generator,
+    n: int,
+    rows: int,
+    cols: int,
+    *,
+    max_faults: int = 1,
+    acc_bits: int = 32,
+) -> tuple[FaultState, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """``n`` single-fault configs: one uniformly placed stuck-at fault each,
+    as a batched FaultState (leading config axis, ``max_faults`` slots so it
+    composes with same-shaped multi-fault tables) PLUS the host ground-truth
+    draws ``(r, c, bit, val)`` — the detector-coverage campaign needs the
+    *keys* (which PE, which bit) to model scan-cursor timing and to emit
+    exact injection events, not just the device tables."""
+    r = rng.integers(0, rows, size=n).astype(np.int32)
+    c = rng.integers(0, cols, size=n).astype(np.int32)
+    bit = rng.integers(0, acc_bits, size=n).astype(np.int32)
+    val = rng.integers(0, 2, size=n).astype(np.int32)
+    fpt = np.full((n, max_faults, 2), -1, np.int32)
+    fpt[:, 0, 0], fpt[:, 0, 1] = r, c
+    bits = np.zeros((n, max_faults), np.int32)
+    vals = np.zeros((n, max_faults), np.int32)
+    bits[:, 0], vals[:, 0] = bit, val
+    states = FaultState(jnp.asarray(fpt), jnp.asarray(bits), jnp.asarray(vals))
+    return states, r, c, bit, val
+
+
 @functools.partial(jax.jit, static_argnames=("rows", "cols", "capacity", "prune"))
 def batched_repair_plans(
     states: FaultState,

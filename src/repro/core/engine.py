@@ -480,6 +480,7 @@ def apply_fault_epilogue(
     cols: int,
     *,
     row_residue: jax.Array | None = None,
+    col_residue: jax.Array | None = None,
 ) -> jax.Array:
     """Apply a packed fault meta grid to an ``(..., N)`` output view in one
     pass — bit-identical to the two-pass corrupt + DPPU-overwrite + prune
@@ -490,6 +491,10 @@ def apply_fault_epilogue(
     ``row_residue``: precomputed ``i % rows`` indices broadcastable against
     the leading axes (the batched expert path passes ``(b, 1, c, 1)`` so one
     epilogue covers every expert); default is the flattened-2-D view's rows.
+    ``col_residue``: precomputed ``j % cols`` indices broadcastable against
+    the last axis — the ABFT path (:func:`abft_checksums`) routes its
+    appended checksum row/column through the PE residue it occupies in the
+    augmented output view; default is the view's own columns.
 
     The whole decision tree lowers to a per-PE **AND/OR mask pair** computed
     at grid granularity (rows·cols — tiny, state-dependent only, so XLA
@@ -510,7 +515,8 @@ def apply_fault_epilogue(
     if row_residue is None:
         m = out.shape[0]
         row_residue = (jnp.arange(m) % rows)[:, None]
-    col_residue = jnp.arange(n) % cols
+    if col_residue is None:
+        col_residue = jnp.arange(n) % cols
     # grid-granularity mask construction (hoisted: depends on meta only)
     bit = meta & META_BIT_MASK
     val = (meta >> META_VAL_SHIFT) & 1
@@ -527,6 +533,98 @@ def apply_fault_epilogue(
         return ((out.astype(jnp.int32) & am) | om).astype(out.dtype)
     raw = jax.lax.bitcast_convert_type(out.astype(jnp.float32), jnp.int32)
     return jax.lax.bitcast_convert_type((raw & am) | om, jnp.float32).astype(out.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# ABFT checksum carriers (the third detector — repro.transient.abft)
+# --------------------------------------------------------------------------- #
+def abft_encode(w: jax.Array) -> jax.Array:
+    """Encode-time ABFT weight checksum: ``wc[k] = sum_j w[k, j]``, accumulated
+    in the datapath's accumulator dtype (int32 for integer weights, float32
+    otherwise).  Compute it ONCE at weight load and store it — a weight bit
+    flipped in memory *after* encode breaks the ``x @ wc == out.sum(-1)``
+    invariant, which is the only way ABFT can see weight-memory SEUs: a
+    checksum recomputed from the corrupted weights is self-consistent
+    (``abft_checksums`` docstring; thresholds in repro.transient.abft)."""
+    acc = jnp.int32 if jnp.issubdtype(w.dtype, jnp.integer) else jnp.float32
+    return w.astype(acc).sum(axis=-1)
+
+
+def abft_checksums(
+    x: jax.Array,
+    w: jax.Array,
+    state: FaultState | None,
+    *,
+    cfg: HyCAConfig,
+    plan: RepairPlan | None = None,
+    n_repair: int | None = None,
+    wc: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array | None]:
+    """The ABFT checksum lanes of ``x @ w`` *carried through the virtual
+    array*: what the augmented matmul's extra output row/column would hold,
+    corrupted / repaired / pruned by the same packed fault meta the data rows
+    see.  Returns ``(chk_row, chk_col)``:
+
+      * ``chk_row`` — (1, N) column-checksum row ``colsum(x) @ w``, mapped to
+        output row M of the augmented view (PE row ``M % rows``).  Its
+        syndrome against ``out.sum(rows)`` flags corrupted *accumulations*
+        (MAC / output-register faults).  It reads the SAME ``w`` as the data
+        path, so a weight-memory flip is consistent here by construction —
+        that failure class belongs to ``chk_col``.
+      * ``chk_col`` — (M, 1) row-checksum column ``x @ wc`` with ``wc`` the
+        encode-time weight checksum (:func:`abft_encode`), mapped to output
+        column N (PE col ``N % cols``).  A weight flipped after encode makes
+        ``chk_col != out.sum(cols)``.  ``None`` when ``wc`` is ``None``.
+
+    The checksums ride BESIDE :func:`hyca_matmul`, never inside it: the data
+    matmul's accumulation order is untouched, so enabling ABFT cannot
+    perturb the protected==off bit-exactness invariant.  Integer datapaths
+    are exact end to end (int32 addition is associative mod 2**32 — a
+    fault-free syndrome is exactly zero); float checksums reassociate the
+    reduction and need the eps-scaled thresholds in repro.transient.abft.
+    """
+    pref = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    x2 = x.reshape(-1, x.shape[-1]).astype(pref)
+    m = x2.shape[0]
+    n = w.shape[-1]
+    chk_row = jnp.matmul(x2.sum(axis=0, keepdims=True), w, preferred_element_type=pref)
+    chk_col = None
+    if wc is not None:
+        chk_col = jnp.matmul(x2, wc.reshape(-1, 1).astype(pref), preferred_element_type=pref)
+    if cfg.mode != "off" and state is not None:
+        meta = fault_meta_grid(state, cfg, plan, n_repair=n_repair)
+        chk_row = apply_fault_epilogue(
+            chk_row, meta, cfg.rows, cfg.cols,
+            row_residue=jnp.full((1, 1), m % cfg.rows, jnp.int32),
+        )
+        if chk_col is not None:
+            chk_col = apply_fault_epilogue(
+                chk_col, meta, cfg.rows, cfg.cols,
+                col_residue=jnp.full((1,), n % cfg.cols, jnp.int32),
+            )
+    return chk_row, chk_col
+
+
+def hyca_matmul_abft(
+    x: jax.Array,
+    w: jax.Array,
+    state: FaultState | None,
+    *,
+    cfg: HyCAConfig,
+    n_repair: int | None = None,
+    plan: RepairPlan | None = None,
+    wc: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """:func:`hyca_matmul` plus the ABFT checksum lanes: returns
+    ``(out, chk_row, chk_col)`` where ``out`` is bit-for-bit the plain
+    :func:`hyca_matmul` result (the checksums are computed beside it, see
+    :func:`abft_checksums`) and the checksums are corrupted through the same
+    fault grids at their augmented-view residues."""
+    out = hyca_matmul(x, w, state, cfg=cfg, n_repair=n_repair, plan=plan)
+    chk_row, chk_col = abft_checksums(
+        x, w, state, cfg=cfg, plan=plan, n_repair=n_repair, wc=wc
+    )
+    return out, chk_row, chk_col
 
 
 def _pe_multiplicity(m: int, n: int, rows: int, cols: int) -> np.ndarray:

@@ -125,12 +125,19 @@ class StuckAtFault:
     value: int
 
     def apply(self, acc: np.ndarray) -> np.ndarray:
-        a = acc.astype(np.int64)
-        mask = np.int64(1) << self.bit
+        # Mask in the accumulator's own 32-bit width: the engine's stuck-at
+        # mux (engine._stuck_at_i32 and the kernel family's drain) operates on
+        # the int32 bit pattern, where forcing bit 31 on is the SIGN bit —
+        # widening to int64 first turned that into +2**31 instead of the
+        # wraparound to -2**31 the hardware observes.  The uint32 view keeps
+        # the shift well-defined at bit 31; the int32 array shares its memory.
+        a = acc.astype(np.int32)
+        u = a.view(np.uint32)
+        mask = np.uint32(1) << np.uint32(self.bit)
         if self.value:
-            a = a | mask
+            u |= mask
         else:
-            a = a & ~mask
+            u &= ~mask
         return a
 
 

@@ -41,6 +41,7 @@ from repro.core.engine import (
     HyCAConfig,
     RepairPlan,
     _pe_grids,
+    abft_checksums,
     apply_fault_epilogue,
     fault_meta_grid,
     hyca_matmul,
@@ -80,10 +81,16 @@ class ProtectPolicy:
     :data:`SITES`).  ``layer_fraction``: leading fraction of each main-stack
     layer scan that runs protected; the remaining layers are lowered with
     plain matmuls (zero fault-machinery overhead, not a traced select).
+    ``abft``: carry ABFT checksum lanes beside protected matmuls —
+    :meth:`FTContext.abft_matmul` returns ``(out, chk_row, chk_col)`` with
+    ``out`` bit-exact with :meth:`FTContext.matmul` (the checksums ride
+    beside the data path, never inside it); off (the default) makes
+    ``abft_matmul`` return ``None`` checksums at zero extra cost.
     """
 
     sites: frozenset[str] | None = None
     layer_fraction: float = 1.0
+    abft: bool = False
 
     def __post_init__(self):
         if self.sites is not None:
@@ -252,6 +259,40 @@ class FTContext:
         else:
             raise ValueError(f"unknown dispatch {self.dispatch!r}; known: {DISPATCHES}")
         return out.astype(x.dtype)
+
+    def abft_matmul(
+        self, x: jax.Array, w: jax.Array, *, site: str, wc: jax.Array | None = None
+    ) -> tuple[jax.Array, jax.Array | None, jax.Array | None]:
+        """:meth:`matmul` plus ABFT checksum lanes carried through the array
+        (``policy.abft`` — the third detector, docs/faults.md).
+
+        Returns ``(out, chk_row, chk_col)``.  ``out`` is ALWAYS bit-exact
+        with ``matmul(x, w, site=site)`` on the same dispatch: the checksums
+        are computed beside the data matmul
+        (:func:`~repro.core.engine.abft_checksums`), never appended into it,
+        so turning the knob on cannot perturb the protected==off invariant.
+        Both checksums are ``None`` when the policy does not cover the site
+        or ``policy.abft`` is off; ``chk_col`` additionally needs ``wc`` (the
+        encode-time weight checksum, :func:`~repro.core.engine.abft_encode`)
+        — without it only MAC/accumulator faults are detectable, with it
+        weight-memory flips are too.  Checksum corruption is element-granular
+        (the two-pass/ref-fused semantics); under the Pallas backend's
+        tile-granular drain the checksum lane is a conservative detector,
+        not a bit-mirror of the kernel's corruption placement.
+
+        Syndromes and thresholds live in ``repro.transient.abft`` — this
+        method only carries the lanes."""
+        out = self.matmul(x, w, site=site)
+        if not (self.protects(site) and self.policy.abft):
+            return out, None, None
+        # plain dispatch leaves the data path uncorrupted — the checksum
+        # lanes must match (clean), or a healthy array would raise syndromes
+        state = None if self.dispatch == "plain" else self.state
+        chk_row, chk_col = abft_checksums(
+            x, w, state, cfg=self.hyca, plan=self._plan_for(site),
+            wc=wc,
+        )
+        return out, chk_row, chk_col
 
     def einsum(self, spec: str, x: jax.Array, w: jax.Array, *, site: str) -> jax.Array:
         """Batched-weight einsum through the protected array.

@@ -105,3 +105,27 @@ def ft_matmul_ref(
         ej = (jnp.arange(n) % cols)[None, :]
         out = jnp.where(pe_prune[ei, ej], jnp.zeros_like(out), out)
     return out
+
+
+def abft_syndromes_ref(x, w, out, wc=None):
+    """Host float64 ABFT syndrome oracle (numpy, no jit): what the carried
+    checksum lanes *should* disagree with ``out`` by.  Returns
+    ``(col_syndrome (N,), row_syndrome (M,) | None)`` where
+
+        col_syndrome = colsum(x) @ w - out.sum(rows)
+        row_syndrome = x @ wc        - out.sum(cols)   (wc: encode-time)
+
+    Everything is widened to f64 before any reduction, so for the int32 and
+    f32 datapaths the oracle is exact up to 2^53 — the threshold-free ground
+    truth the jnp syndromes (repro.transient.abft.abft_check) are tested
+    against."""
+    import numpy as np
+
+    x64 = np.asarray(x, np.float64).reshape(-1, np.asarray(x).shape[-1])
+    w64 = np.asarray(w, np.float64)
+    o64 = np.asarray(out, np.float64).reshape(-1, np.asarray(out).shape[-1])
+    col = x64.sum(axis=0) @ w64 - o64.sum(axis=0)
+    row = None
+    if wc is not None:
+        row = x64 @ np.asarray(wc, np.float64).reshape(-1) - o64.sum(axis=-1)
+    return col, row

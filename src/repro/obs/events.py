@@ -164,6 +164,51 @@ def repair_records(log: EventLog) -> list[dict]:
     return records
 
 
+def transient_records(log: EventLog) -> list[dict]:
+    """Per-flip detection timeline for SEU injections: each
+    ``transient.flip`` paired with the first ``abft.alarm`` at or after its
+    injection step.  Exact latency accounting is possible because the
+    injector keys every flip by (step, site, index, bit) at emit time
+    (repro.transient.seu.emit_flip_events) — same contract as
+    :func:`detection_records` for permanent faults.  ``latency`` is None for
+    flips never alarmed (or injected at an unknown step)."""
+    alarm_steps = sorted(
+        e.step for e in log.of_kind("abft.alarm") if e.step is not None
+    )
+    records = []
+    for e in log.of_kind("transient.flip"):
+        later = [s for s in alarm_steps if e.step is not None and s >= e.step]
+        records.append({
+            "site": e.data["site"],
+            "index": e.data["index"],
+            "bit": e.data["bit"],
+            "injected_step": e.step,
+            "detected_step": later[0] if later else None,
+            "latency": (later[0] - e.step) if later else None,
+        })
+    return records
+
+
+def memory_fault_records(log: EventLog) -> list[dict]:
+    """Per-leaf outcome of the checkpoint memory-fault path: for each leaf
+    that ever raised ``memory.fault``, the actions it went through
+    (detected / refetched / refused, in order) and the final disposition —
+    ``"refetched"`` means the guarded restore recovered it from a pristine
+    source, ``"refused"`` means the restore was (correctly) rejected."""
+    by_leaf: dict[str, list[Event]] = {}
+    for e in log.of_kind("memory.fault"):
+        by_leaf.setdefault(e.data["leaf"], []).append(e)
+    return [
+        {
+            "leaf": leaf,
+            "actions": [e.data["action"] for e in evs],
+            "outcome": evs[-1].data["action"],
+            "steps": [e.step for e in evs],
+        }
+        for leaf, evs in sorted(by_leaf.items())
+    ]
+
+
 def latency_summary(latencies: list[int], prefix: str) -> dict:
     """mean/p50/p95 of a step-latency list, keyed ``{prefix}_{stat}_steps``;
     all None when empty (no measurable latencies is not zero latency)."""

@@ -6,6 +6,13 @@ artifacts: the event log as JSONL at PATH (validated by
 Prometheus text-format gauge file at ``PATH + ".prom"`` — the de-facto
 scrape format, so a node exporter's textfile collector (or a human with
 grep) can consume serving telemetry without a client library.
+
+Flattening rule: numeric and bool leaves (nested dicts dotted into the
+metric name) become gauges; a **list** leaf exports its *length* as a
+``<name>_total`` count gauge (the elements themselves have no stable gauge
+identity — e.g. ``injection_steps`` becomes ``hyca_injection_steps_total``
+instead of silently vanishing from the artifact); ``None`` and string
+leaves are skipped entirely — they have no gauge representation.
 """
 from __future__ import annotations
 
@@ -15,9 +22,24 @@ import re
 _NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
 
 
+def _name(raw: str) -> str:
+    """Sanitize to the exposition grammar ``[a-zA-Z_][a-zA-Z0-9_]*``: invalid
+    characters become ``_`` and a leading digit gets a ``_`` prefix (metric
+    and label names must not start with a digit)."""
+    out = _NAME_RE.sub("_", raw)
+    return "_" + out if out[:1].isdigit() else out
+
+
 def _metric_name(prefix: str, *parts: str) -> str:
-    name = "_".join([prefix, *parts])
-    return _NAME_RE.sub("_", name)
+    return _name("_".join([prefix, *parts]))
+
+
+def _escape_label_value(v) -> str:
+    """Escape a label value per the text exposition format: backslash first
+    (so the other escapes aren't double-escaped), then double-quote and
+    newline.  An arch name like ``qwen"1.5\\b`` round-trips instead of
+    emitting an unparseable sample line."""
+    return str(v).replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
 
 
 def _flatten(d: dict, parts: tuple[str, ...] = ()) -> list[tuple[tuple[str, ...], float]]:
@@ -30,20 +52,28 @@ def _flatten(d: dict, parts: tuple[str, ...] = ()) -> list[tuple[tuple[str, ...]
             out.append((p, float(v)))
         elif isinstance(v, (int, float)):
             out.append((p, float(v)))
-        # None / strings / lists have no gauge representation — skipped
+        elif isinstance(v, (list, tuple)):
+            # lists have no per-element gauge identity; export the count so
+            # the leaf stays visible in .prom (module docstring rule)
+            out.append((p + ("total",), float(len(v))))
+        # None / strings have no gauge representation — skipped
     return out
 
 
 def prometheus_text(metrics: dict, *, prefix: str = "hyca", labels: dict | None = None) -> str:
     """Flatten a (possibly nested) summary dict into Prometheus text format.
 
-    Numeric leaves become gauges named ``{prefix}_{dotted_path}``; None,
-    strings, and lists are skipped (they are not gauges).  ``labels`` are
-    attached to every sample (e.g. ``{"arch": "qwen1.5-0.5b"}``).
+    Numeric leaves become gauges named ``{prefix}_{dotted_path}``; list
+    leaves become ``{name}_total`` count gauges; None and strings are
+    skipped (they are not gauges).  ``labels`` are attached to every sample
+    (e.g. ``{"arch": "qwen1.5-0.5b"}``) with values escaped per the
+    exposition format (backslash, double-quote, newline).
     """
     label_str = ""
     if labels:
-        inner = ",".join(f'{_NAME_RE.sub("_", k)}="{v}"' for k, v in sorted(labels.items()))
+        inner = ",".join(
+            f'{_name(k)}="{_escape_label_value(v)}"' for k, v in sorted(labels.items())
+        )
         label_str = "{" + inner + "}"
     lines = []
     for parts, value in _flatten(metrics):

@@ -37,6 +37,11 @@ KIND_SCHEMAS: dict[str, dict[str, tuple[type, ...]]] = {
                     "quality_fraction": (float, int), "retrained": (bool,)},
     "train.step": {"loss": (float, int), "lr": (float, int),
                    "gnorm": (float, int), "ms": (float, int)},
+    # transient-fault stack (repro.transient, docs/faults.md)
+    "transient.flip": {"site": (str,), "index": (int,), "bit": (int,)},
+    "memory.fault": {"leaf": (str,), "action": (str,)},
+    "abft.alarm": {"site": (str,), "n_flagged": (int,),
+                   "syndrome_max": (float, int)},
 }
 
 

@@ -198,6 +198,12 @@ class FaultManagerConfig:
     # retires (column-prefix discard) as before
     remap: bool = False
     max_remap_fraction: float = 0.5
+    # ABFT canary (repro.transient.abft, docs/faults.md): carry the checksum
+    # pair beside each probe matmul and alarm on non-zero syndromes.  The
+    # probe datapath is int32, so the syndromes are EXACT — an alarm means
+    # real corruption somewhere in the probed block, including MAC/weight
+    # transients the per-PE ±probe comparison can miss between visits
+    abft: bool = False
 
 
 class FaultManager:
@@ -224,6 +230,7 @@ class FaultManager:
         self.scans = 0
         self.repairs = 0
         self.remaps = 0
+        self.abft_alarms = 0
         # optional repro.obs EventLog (shared with the injector): lifecycle
         # transitions and sweep completions are emitted here
         self.log = None
@@ -363,6 +370,49 @@ class FaultManager:
             self.confirmed_state = _merge(self.confirmed_state, jnp.asarray(confirmed))
             self._reassign_repair()
 
+    def abft_check(self) -> bool:
+        """ABFT canary over the whole probe matmul (docs/faults.md): carry
+        the checksum pair beside the sweep's probe computation and compare
+        against the array's actual accumulators.  The probe datapath is int32
+        with small operands, so both syndromes are EXACT — zero means the
+        whole array's probe output is sum-consistent this step, non-zero
+        means real corruption, including faults sitting in row blocks the
+        cursor will not visit for another ``steps_per_sweep`` steps.  That
+        step-granular whole-array property is what the per-block ±probe scan
+        cannot give and why this runs as a third detector, not a replacement.
+
+        Checksum lanes ride the augmented view exactly as in
+        :func:`repro.core.engine.abft_checksums`: the appended row lands at
+        PE row ``rows % rows == 0`` and the appended column at PE col
+        ``cols % cols == 0``, so the lanes are corrupted by the truth grids
+        of PE row/column 0.  Returns True and emits ``abft.alarm`` when any
+        syndrome is non-zero."""
+        inj = self.injector
+        sweep = int(self.scan_state.sweep)
+        px, pw = inj.probe_operands(sweep, self.cfg.probe_window)
+        ar = inj.corrupted_probe(px, pw).astype(np.int64)
+
+        def stuck(v, sl_r, sl_c):
+            mask = (np.int32(1) << inj.stuck_bit[sl_r, sl_c]).astype(np.int32)
+            bad = np.where(inj.stuck_val[sl_r, sl_c] > 0, v | mask, v & ~mask)
+            return np.where(inj.fault_map[sl_r, sl_c], bad, v).astype(np.int32)
+
+        chk_row = (px.sum(axis=0).astype(np.int64) @ pw.astype(np.int64)).astype(np.int32)
+        chk_col = (px.astype(np.int64) @ pw.sum(axis=1).astype(np.int64)).astype(np.int32)
+        chk_row = stuck(chk_row, 0, slice(None))
+        chk_col = stuck(chk_col, slice(None), 0)
+        syn_col = chk_row.astype(np.int64) - ar.sum(axis=0)
+        syn_row = chk_col.astype(np.int64) - ar.sum(axis=1)
+        n_flagged = int((syn_col != 0).sum() + (syn_row != 0).sum())
+        if n_flagged == 0:
+            return False
+        self.abft_alarms += 1
+        self._emit(
+            "abft.alarm", site="probe", n_flagged=n_flagged,
+            syndrome_max=int(max(np.abs(syn_col).max(), np.abs(syn_row).max())),
+        )
+        return True
+
     def scan_step(self) -> tuple[bool, tuple[int, int]]:
         """One batched probe step (call once per decode step): checks
         ``scan_block`` grid rows × all columns against the complementary
@@ -383,6 +433,8 @@ class FaultManager:
         self.scans += 1
         if int(self.scan_state.sweep) > sweep:
             self._emit("scan.sweep", sweep=sweep, steps=self.engine.cfg.steps_per_sweep)
+        if self.cfg.abft:
+            self.abft_check()
         self._sync()
         return not bool(np.asarray(flags).any()), (r0, r0 + block)
 

@@ -169,6 +169,7 @@ class ServingMetrics:
             out.update(latency_summary(slat, "suspect_latency"))
             out.update(latency_summary(rlat, "repair_latency"))
             out["sweeps_completed"] = len(self.log.of_kind("scan.sweep"))
+            out["abft_alarms"] = len(self.log.of_kind("abft.alarm"))
         if counters is not None:
             out["counters"] = counters
         return out

@@ -99,6 +99,11 @@ class ServerConfig:
     # discovery trace at bundle build is the only cost; the decode graph's
     # dot ops are identical either way.
     counters: bool = False
+    # ABFT canary on the scan path (repro.transient.abft, docs/faults.md):
+    # each scan step also carries the probe matmul's checksum pair and emits
+    # abft.alarm on non-zero syndromes — whole-array, step-granular coverage
+    # of transient corruption the block cursor would only meet next sweep
+    abft: bool = False
     seed: int = 0
 
     def hyca(self) -> HyCAConfig:
@@ -232,6 +237,7 @@ class FaultTolerantServer:
                 confirm_hits=cfg.confirm_hits, scan_block=cfg.scan_block,
                 remap=cfg.repair != "none",
                 max_remap_fraction=cfg.max_remap_fraction,
+                abft=cfg.abft,
             ),
         )
         self.manager.log = self.log

@@ -1,0 +1,45 @@
+"""repro.transient — the transient/memory fault stack (third fault class).
+
+PRs 1–8 modelled *permanent* PE faults (stuck-at accumulators, detected by
+ScanEngine probes, repaired by the DPPU).  This package adds the faults that
+do not sit still:
+
+  * :mod:`repro.transient.seu`      — campaign-sampled SEU bit-flip
+    injection for weight leaves, activation panels, and KV-cache pages;
+  * :mod:`repro.transient.memory`   — stored-byte corruption on the
+    checkpoint path, exercising the sha256 leaf digests end to end
+    (tamper → detect → re-fetch/refuse);
+  * :mod:`repro.transient.abft`     — syndrome checks for the
+    checksum-augmented matmul (:func:`repro.core.engine.abft_checksums`),
+    the third detector beside ScanEngine and OnlineVerifier;
+  * :mod:`repro.transient.coverage` — the detector-coverage campaign
+    (fault class × detector matrix, benchmarks/detector_coverage.py).
+
+Taxonomy and the coverage matrix: docs/faults.md.
+"""
+from repro.transient.abft import abft_check
+from repro.transient.coverage import CoverageSpec, run_coverage
+from repro.transient.memory import guarded_restore, tamper_checkpoint, tamper_leaf
+from repro.transient.seu import (
+    FlipPlan,
+    FlipSchedule,
+    emit_flip_events,
+    flip_bits,
+    sample_flip_plans,
+    sample_kv_flips,
+)
+
+__all__ = [
+    "abft_check",
+    "CoverageSpec",
+    "run_coverage",
+    "guarded_restore",
+    "tamper_checkpoint",
+    "tamper_leaf",
+    "FlipPlan",
+    "FlipSchedule",
+    "emit_flip_events",
+    "flip_bits",
+    "sample_flip_plans",
+    "sample_kv_flips",
+]

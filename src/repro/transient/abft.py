@@ -1,0 +1,85 @@
+"""ABFT syndrome checks for checksum-augmented matmul.
+
+The checksum *carry* lives in the engine (:func:`repro.core.engine.
+abft_checksums` rides the lanes through the same stuck-at epilogue as the
+data); this module owns the *decision*: compare the carried lanes against
+sums recomputed from the produced output and flag the columns/rows whose
+syndromes are non-zero.
+
+Two-sided scheme (Huang–Abraham, adapted to the PE-residue drain):
+
+  * **column syndrome** — ``chk_row = colsum(x) @ w`` vs ``out.sum(axis=0)``.
+    Both sides read the SAME weights, so this side is structurally blind to
+    weight-memory flips; it catches MAC/accumulator corruption (the carried
+    lane went through a different PE row residue than most data elements).
+  * **row syndrome** — ``chk_col = x @ wc`` with ``wc = abft_encode(w)``
+    stored at weight-LOAD time vs ``out.sum(axis=-1)``.  A weight bit
+    flipped after encode breaks the stored invariant — this is the side the
+    detector_coverage benchmark shows ScanEngine cannot replicate.
+
+int32 accumulation is associative mod 2^32, so integer syndromes are
+EXACTLY zero when fault-free — no thresholds.  Float sums reassociate, so
+float syndromes use a relative threshold scaled by the recomputed row/col
+magnitude (same shape of tolerance as ScanEngine's output_block_check).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def abft_check(
+    out: jax.Array,
+    chk_row: jax.Array | None = None,
+    chk_col: jax.Array | None = None,
+    *,
+    rtol: float = 1e-4,
+    atol: float = 1e-5,
+) -> dict:
+    """Compare carried checksum lanes against sums of the produced ``out``.
+
+    ``out`` is (..., M, N) (leading batch dims are folded into M, mirroring
+    the engine's checksum shapes); ``chk_row`` is the carried (1, N) column
+    checksum and ``chk_col`` the carried (M, 1) row checksum — either may be
+    None (that side simply isn't checked).  Returns a dict pytree (jit- and
+    vmap-friendly):
+
+      * ``col_flags`` (N,) bool — column syndromes over threshold,
+      * ``row_flags`` (M,) bool — row syndromes over threshold,
+      * ``detected``  ()  bool — any flag set.
+
+    Integer dtypes are exact (syndrome != 0); float dtypes use
+    ``|syndrome| > rtol * magnitude + atol`` with the magnitude taken from
+    the recomputed absolute sums, so the tolerance scales with the data like
+    ScanEngine's window recompute."""
+    out2 = out.reshape(-1, out.shape[-1])
+    m, n = out2.shape
+    exact = jnp.issubdtype(out2.dtype, jnp.integer)
+    pref = jnp.int32 if exact else jnp.float32
+    o = out2.astype(pref)
+
+    def _flags(carried, recomputed, magnitude):
+        syndrome = carried - recomputed
+        if exact:
+            return syndrome != 0
+        return jnp.abs(syndrome) > rtol * magnitude + atol
+
+    col_flags = jnp.zeros((n,), bool)
+    if chk_row is not None:
+        col_flags = _flags(
+            chk_row.astype(pref).reshape(-1)[:n],
+            o.sum(axis=0),
+            jnp.abs(o).sum(axis=0),
+        )
+    row_flags = jnp.zeros((m,), bool)
+    if chk_col is not None:
+        row_flags = _flags(
+            chk_col.astype(pref).reshape(-1)[:m],
+            o.sum(axis=-1),
+            jnp.abs(o).sum(axis=-1),
+        )
+    return {
+        "col_flags": col_flags,
+        "row_flags": row_flags,
+        "detected": jnp.any(col_flags) | jnp.any(row_flags),
+    }

@@ -1,0 +1,285 @@
+"""Detector-coverage campaign: fault class × detector matrix.
+
+THE experiment this PR exists for: measure which detector sees which fault
+class.  Three classes (docs/faults.md taxonomy):
+
+  * ``permanent``         — stuck-at PE accumulator fault (PR 1's model);
+  * ``transient_mac``     — one-shot SEU in an accumulator during one step's
+    matmul (one output element's bit XORed);
+  * ``transient_weight``  — SEU in stored weight memory (one weight bit
+    XORed before the matmul reads it).
+
+against three detectors, each modelled by its real contract:
+
+  * ``scan``   — ScanEngine probe (repro.core.scan.probe_operands, the ±
+    complementary pair).  Sees the PE array, never the operands: a permanent
+    fault is caught whenever the probes expose the stuck bit; a MAC transient
+    only if the scan cursor happened to be probing that row block at upset
+    time; a weight flip NEVER (the probe supplies its own operands).
+  * ``verify`` — OnlineVerifier output-block recompute (the
+    ``output_block_check`` contract, reimplemented in pure jnp here because
+    the scan-module version returns a host array and cannot vmap).  It
+    recomputes from the operands *as stored* — so a weight flip corrupts the
+    recompute identically and is invisible; structural blindness, not a bug.
+  * ``abft``   — the checksum pair (repro.transient.abft): carried column
+    checksum catches MAC corruption anywhere in the array every step;
+    the encode-time weight checksum (:func:`repro.core.engine.abft_encode`)
+    catches weight flips — the class nothing else sees.
+
+Campaign idiom (PR 4): ONE jitted program per fault class, vmapped over the
+per-config draws (fault site, bit, scan cursor, verify window), int32 small-
+int datapath so every detector comparison is exact.  ``TRACE_COUNTS`` counts
+actual retraces — the benchmark asserts swapping fault configs recompiles
+nothing.  Coverage is reported *conditional on manifestation* (configs whose
+fault changed at least one output element): a stuck-at that writes the bit
+already there corrupts nothing, and counting it against a detector would
+understate everyone equally.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.campaign import binomial_halfwidth
+from repro.core.scan import probe_operands
+from repro.transient.abft import abft_check
+from repro.transient.seu import flip_bits
+
+FAULT_CLASSES = ("permanent", "transient_mac", "transient_weight")
+DETECTORS = ("scan", "verify", "abft")
+
+# trace-time counters: each jitted class program bumps its entry when (and
+# only when) XLA actually retraces it — the zero-recompile evidence
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class CoverageSpec:
+    """Static geometry of one coverage campaign (hashable → jit-static).
+
+    ``rows``/``cols`` — PE array; ``m``/``k``/``n`` — the probed matmul;
+    ``scan_block`` — rows probed per serving step (the cursor's stride: a MAC
+    transient is scan-visible only if the cursor is on its block);
+    ``verify_rows`` — the OnlineVerifier's per-step output row window."""
+
+    rows: int = 8
+    cols: int = 8
+    m: int = 32
+    k: int = 16
+    n: int = 32
+    n_configs: int = 64
+    scan_block: int = 1
+    verify_rows: int = 4
+    seed: int = 0
+
+    @property
+    def n_blocks(self) -> int:
+        return -(-self.rows // self.scan_block)
+
+
+def _operands(spec: CoverageSpec) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Small-int int32 operands (the probe value discipline: magnitudes stay
+    far below 2^30, so every bit position is writable without overflow UB)."""
+    rng = np.random.default_rng(spec.seed * 7919 + 17)
+    x = rng.integers(-4, 8, size=(spec.m, spec.k)).astype(np.int32)
+    w = rng.integers(-4, 8, size=(spec.k, spec.n)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+def _stuck_i32(v: jax.Array, bit: jax.Array, val: jax.Array) -> jax.Array:
+    mask = jnp.left_shift(jnp.int32(1), bit)
+    return jnp.where(val > 0, v | mask, v & ~mask)
+
+
+def _verify_detects(out_f: jax.Array, out_clean: jax.Array, vr0: jax.Array, vrows: int) -> jax.Array:
+    """OnlineVerifier model: exact int recompute over output rows
+    [vr0, vr0+vrows) — flags iff the corruption manifests inside the window.
+    jnp reimplementation of scan.output_block_check's int branch (that one
+    returns host numpy and takes static row bounds; a vmapped campaign needs
+    traced ``vr0``)."""
+    changed = out_f != out_clean
+    block = jax.lax.dynamic_slice_in_dim(changed, vr0, vrows, axis=0)
+    return jnp.any(block)
+
+
+def _abft_detects(out_f, chk_row, chk_col) -> jax.Array:
+    return abft_check(out_f, chk_row, chk_col)["detected"]
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _permanent_program(spec: CoverageSpec, x, w, wc, r, c, bit, val, vr0):
+    """Vmapped single-config evaluation of the permanent class."""
+    TRACE_COUNTS["permanent"] += 1
+    out_clean = jnp.matmul(x, w, preferred_element_type=jnp.int32)
+    acc_pos = jnp.matmul(x.sum(axis=0, keepdims=True), w, preferred_element_type=jnp.int32)
+    m, n = out_clean.shape
+    mi = (jnp.arange(m) % spec.rows)[:, None]
+    ni = (jnp.arange(n) % spec.cols)[None, :]
+    # probe accumulators: PE(i,j)'s value for the ± complementary pair
+    px, pw = probe_operands(spec.rows, spec.cols, 0, window=8)
+    probe = jnp.matmul(jnp.asarray(px), jnp.asarray(pw), preferred_element_type=jnp.int32)
+
+    def one(r, c, bit, val, vr0):
+        hit = (mi == r) & (ni == c)
+        out_f = jnp.where(hit, _stuck_i32(out_clean, bit, val), out_clean)
+        manifested = jnp.any(out_f != out_clean)
+        # scan: persistent fault — the sweep reaches every block, detection
+        # hinges only on the ± probes exposing the stuck bit
+        a = probe[r, c]
+        scan = (_stuck_i32(a, bit, val) != a) | (_stuck_i32(-a, bit, val) != -a)
+        verify = _verify_detects(out_f, out_clean, vr0, spec.verify_rows)
+        # checksum lanes ride the augmented view: row M at PE row M%rows,
+        # col N at PE col N%cols — corrupted by the same persistent fault
+        chk_row = jnp.where((m % spec.rows == r) & (ni[:1] == c),
+                            _stuck_i32(acc_pos, bit, val), acc_pos)
+        chk_col_clean = jnp.matmul(x.astype(jnp.int32), wc.reshape(-1, 1),
+                                   preferred_element_type=jnp.int32)
+        chk_col = jnp.where((mi == r) & (n % spec.cols == c),
+                            _stuck_i32(chk_col_clean, bit, val), chk_col_clean)
+        abft = _abft_detects(out_f, chk_row, chk_col)
+        return manifested, scan & manifested, verify, abft
+
+    return jax.vmap(one)(r, c, bit, val, vr0)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _transient_mac_program(spec: CoverageSpec, x, w, wc, idx, bit, cur, vr0):
+    """One-shot accumulator upset: output word ``idx`` gets bit ``bit``
+    XORed during the step when the scan cursor sat at block ``cur``."""
+    TRACE_COUNTS["transient_mac"] += 1
+    out_clean = jnp.matmul(x, w, preferred_element_type=jnp.int32)
+    chk_row = jnp.matmul(x.sum(axis=0, keepdims=True), w, preferred_element_type=jnp.int32)
+    chk_col = jnp.matmul(x, wc.reshape(-1, 1), preferred_element_type=jnp.int32)
+    n = out_clean.shape[-1]
+
+    def one(idx, bit, cur, vr0):
+        out_f = flip_bits(out_clean, idx[None], bit[None])
+        pe_row = (idx // n) % spec.rows
+        # the probe only witnesses the upset if it was scanning that block
+        # at upset time (an XOR always changes the probe accumulator)
+        scan = pe_row // spec.scan_block == cur
+        verify = _verify_detects(out_f, out_clean, vr0, spec.verify_rows)
+        # the checksum lane accumulated in its own PE — it stays clean and
+        # the column syndrome flags the corrupted data lane
+        abft = _abft_detects(out_f, chk_row, chk_col)
+        return jnp.bool_(True), scan, verify, abft
+
+    return jax.vmap(one)(idx, bit, cur, vr0)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _transient_weight_program(spec: CoverageSpec, x, w, wc, widx, wbit, vr0):
+    """Weight-memory upset: stored weight word ``widx`` flipped BEFORE the
+    matmul reads it.  Everything downstream that re-reads the stored weights
+    (the data path, the verifier's recompute, a recomputed column checksum)
+    is consistently wrong — only the encode-time ``wc`` still knows."""
+    TRACE_COUNTS["transient_weight"] += 1
+    out_clean = jnp.matmul(x, w, preferred_element_type=jnp.int32)
+
+    def one(widx, wbit, vr0):
+        w_f = flip_bits(w, widx[None], wbit[None])
+        out_f = jnp.matmul(x, w_f, preferred_element_type=jnp.int32)
+        manifested = jnp.any(out_f != out_clean)
+        scan = jnp.bool_(False)        # probes never touch model weights
+        # verifier recomputes from the SAME stored (flipped) weights —
+        # AR == BAR + PR holds exactly; structural blindness
+        verify = jnp.bool_(False)
+        chk_row = jnp.matmul(x.sum(axis=0, keepdims=True), w_f,
+                             preferred_element_type=jnp.int32)
+        chk_col = jnp.matmul(x, wc.reshape(-1, 1), preferred_element_type=jnp.int32)
+        abft = _abft_detects(out_f, chk_row, chk_col)
+        return manifested, scan, verify, abft
+
+    return jax.vmap(one)(widx, wbit, vr0)
+
+
+def _draws(spec: CoverageSpec, fault_class: str, seed: int):
+    rng = np.random.default_rng(seed)
+    nc = spec.n_configs
+    vr0 = rng.integers(0, spec.m - spec.verify_rows + 1, size=nc).astype(np.int32)
+    if fault_class == "permanent":
+        r = rng.integers(0, spec.rows, size=nc).astype(np.int32)
+        c = rng.integers(0, spec.cols, size=nc).astype(np.int32)
+        bit = rng.integers(0, 32, size=nc).astype(np.int32)
+        val = rng.integers(0, 2, size=nc).astype(np.int32)
+        return (r, c, bit, val, vr0)
+    if fault_class == "transient_mac":
+        idx = rng.integers(0, spec.m * spec.n, size=nc).astype(np.int32)
+        bit = rng.integers(0, 32, size=nc).astype(np.int32)
+        cur = rng.integers(0, spec.n_blocks, size=nc).astype(np.int32)
+        return (idx, bit, cur, vr0)
+    if fault_class == "transient_weight":
+        widx = rng.integers(0, spec.k * spec.n, size=nc).astype(np.int32)
+        wbit = rng.integers(0, 32, size=nc).astype(np.int32)
+        return (widx, wbit, vr0)
+    raise ValueError(f"unknown fault class {fault_class!r}")
+
+
+_PROGRAMS = {
+    "permanent": _permanent_program,
+    "transient_mac": _transient_mac_program,
+    "transient_weight": _transient_weight_program,
+}
+
+
+def run_class(spec: CoverageSpec, fault_class: str, *, seed: int | None = None) -> dict:
+    """Evaluate one fault class: returns per-detector coverage conditional on
+    manifestation, with binomial CIs.  Calling again with a different
+    ``seed`` swaps every fault config through the SAME compiled program
+    (check ``TRACE_COUNTS[fault_class]``)."""
+    from repro.core.engine import abft_encode
+
+    x, w = _operands(spec)
+    wc = abft_encode(w)
+    draws = _draws(spec, fault_class, spec.seed if seed is None else seed)
+    manifested, scan, verify, abft = (
+        np.asarray(a) for a in _PROGRAMS[fault_class](spec, x, w, wc, *draws)
+    )
+    n_corrupted = int(manifested.sum())
+    per_detector = {}
+    for name, hits in (("scan", scan), ("verify", verify), ("abft", abft)):
+        caught = int((hits & manifested).sum())
+        cov = caught / n_corrupted if n_corrupted else 0.0
+        per_detector[name] = {
+            "coverage": cov,
+            "ci95": float(binomial_halfwidth(cov, max(n_corrupted, 1))),
+            "n_detected": caught,
+        }
+    return {
+        "fault_class": fault_class,
+        "n": spec.n_configs,
+        "n_corrupted": n_corrupted,
+        "detectors": per_detector,
+    }
+
+
+def run_coverage(spec: CoverageSpec) -> dict:
+    """The full fault-class × detector matrix plus retrace evidence: each
+    class program is invoked with TWO different config seeds and the trace
+    counter must not move on the second call (fault configs are data)."""
+    TRACE_COUNTS.clear()
+    classes = {}
+    retraces = {}
+    for fc in FAULT_CLASSES:
+        first = run_class(spec, fc, seed=spec.seed)
+        run_class(spec, fc, seed=spec.seed + 1)  # swap configs: no retrace
+        classes[fc] = first
+        retraces[fc] = int(TRACE_COUNTS[fc])
+    matrix = [
+        {
+            "fault_class": fc,
+            "detector": det,
+            "coverage": classes[fc]["detectors"][det]["coverage"],
+            "ci95": classes[fc]["detectors"][det]["ci95"],
+            "n": classes[fc]["n"],
+            "n_corrupted": classes[fc]["n_corrupted"],
+        }
+        for fc in FAULT_CLASSES
+        for det in DETECTORS
+    ]
+    return {"matrix": matrix, "classes": classes, "retraces": retraces}

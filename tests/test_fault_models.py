@@ -123,6 +123,29 @@ def test_stuck_at_apply():
     assert list(f0.apply(np.array([8, 15], dtype=np.int64))) == [0, 7]
 
 
+def test_stuck_at_apply_bit31_matches_engine_mux():
+    """Regression: forcing bit 31 on is the int32 SIGN bit.  The old int64
+    widening produced +2**31 where the engine's stuck-at mux (and the kernel
+    family's drain) wraps to -2**31 — the host model and the hardware model
+    must agree bit for bit on every bit position, 31 included."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import _stuck_at_i32
+
+    vals = np.array([0, 1, -1, 123456, -123456, 2**31 - 1, -(2**31)], np.int64)
+    for bit in (0, 15, 30, 31):
+        for v in (0, 1):
+            host = fm.StuckAtFault(row=0, col=0, bit=bit, value=v).apply(vals)
+            dev = np.asarray(
+                _stuck_at_i32(jnp.asarray(vals, jnp.int32), jnp.int32(bit), jnp.int32(v))
+            )
+            assert host.dtype == np.int32
+            assert np.array_equal(host, dev), (bit, v, host, dev)
+    # the headline case: stuck-at-1 on bit 31 of 0 is INT32_MIN, not +2**31
+    f31 = fm.StuckAtFault(row=0, col=0, bit=31, value=1)
+    assert f31.apply(np.array([0]))[0] == -(2**31)
+
+
 def test_sample_stuck_at(rng):
     fmap = np.zeros((8, 8), bool)
     fmap[2, 3] = fmap[5, 1] = True

@@ -331,6 +331,39 @@ def test_prometheus_text_format():
     assert "skip_me" not in txt and "name" not in txt
 
 
+def test_prometheus_label_values_escaped():
+    # exposition-format escapes: backslash first, then quote and newline —
+    # a pathological arch name must still yield a parseable sample line
+    txt = prometheus_text(
+        {"steps": 1},
+        labels={"arch": 'q"1.5\\b\nx', "ok": "plain"},
+    )
+    assert 'arch="q\\"1.5\\\\b\\nx"' in txt
+    assert 'ok="plain"' in txt
+    # raw specials must not survive unescaped inside the braces
+    line = [l for l in txt.splitlines() if l.startswith("hyca_steps{")][0]
+    assert "\n" not in line and '\\"' in line
+
+
+def test_prometheus_names_sanitized():
+    # metric names and label names must match [a-zA-Z_][a-zA-Z0-9_]* — a
+    # leading digit gets a "_" prefix, invalid chars become "_"
+    txt = prometheus_text({"2xx": 5, "lat-ms": 1.0}, prefix="9p", labels={"0bad": "v"})
+    for line in txt.splitlines():
+        if not line.startswith("#"):
+            assert not line[0].isdigit(), line
+    assert '_9p_2xx{_0bad="v"} 5' in txt
+    assert '_9p_lat_ms{_0bad="v"} 1' in txt
+    assert '_0bad="v"' in txt and "{0bad=" not in txt
+
+
+def test_prometheus_list_leaves_export_count():
+    # a list leaf exports its LENGTH as <name>_total instead of vanishing
+    txt = prometheus_text({"injection_steps": [3, 7, 9], "empty": []})
+    assert "hyca_injection_steps_total 3" in txt
+    assert "hyca_empty_total 0" in txt
+
+
 def test_write_metrics_out_creates_pair(tmp_path):
     log = EventLog()
     log.emit("scan.bist", confirmed=0)

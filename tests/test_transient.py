@@ -1,0 +1,409 @@
+"""Transient-fault stack acceptance tests (docs/faults.md):
+
+  * SEU injector properties — XOR involution, binomial flip-rate CI,
+    KV flips constrained to live pages, padding semantics;
+  * ABFT checksum detection — bit-exactness of the protected data path with
+    checksums on (both dispatches, all ten registry configs), exact int32
+    syndromes, MAC-flip detection, the weight-flip class only the
+    encode-time checksum sees, and the f64 reference-oracle agreement;
+  * checkpoint memory faults — tamper → digest detect → re-fetch/refuse,
+    surfacing as ``memory.fault`` events;
+  * EventLog schema round-trips and latency derivations for the new kinds;
+  * the detector-coverage campaign's headline ordering + zero-retrace claim;
+  * the FaultManager's in-band ABFT canary.
+"""
+import dataclasses
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import corrupt_leaves, restore, save
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.engine import (
+    HyCAConfig,
+    abft_encode,
+    empty_fault_state,
+    fault_state_from_map,
+    hyca_matmul_abft,
+)
+from repro.core.ftcontext import ProtectPolicy, build_ftcontext
+from repro.kernels.ref import abft_syndromes_ref
+from repro.obs.events import EventLog, memory_fault_records, transient_records
+from repro.obs.schema import validate_event, validate_jsonl
+from repro.transient import (
+    CoverageSpec,
+    FlipPlan,
+    FlipSchedule,
+    abft_check,
+    emit_flip_events,
+    flip_bits,
+    guarded_restore,
+    run_coverage,
+    sample_flip_plans,
+    sample_kv_flips,
+    tamper_checkpoint,
+)
+from repro.transient.memory import pristine_fetcher
+from repro.transient.seu import word_bits
+
+
+def _raw(x):
+    """Host view of the stored bit pattern (dtype-width signed words)."""
+    wdt = {1: jnp.int8, 2: jnp.int16, 4: jnp.int32}[np.dtype(x.dtype).itemsize]
+    return np.asarray(jax.lax.bitcast_convert_type(jnp.ravel(x), wdt))
+
+
+# --------------------------------------------------------------------------- #
+# SEU injector: flip_bits properties
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32, jnp.int8])
+def test_flip_bits_involution(rng, dtype):
+    """Applying the same plan twice restores the leaf bit-for-bit — for every
+    supported word width, including patterns that transit NaN/Inf."""
+    x = jnp.asarray(rng.standard_normal((6, 8)) * 10, dtype)
+    nbits = word_bits(dtype)
+    idx = jnp.asarray(rng.choice(48, size=9, replace=False), jnp.int32)
+    bit = jnp.asarray(rng.integers(0, nbits, size=9), jnp.int32)
+    once = flip_bits(x, idx, bit)
+    twice = flip_bits(once, idx, bit)
+    assert not np.array_equal(_raw(once), _raw(x))       # something flipped
+    np.testing.assert_array_equal(_raw(twice), _raw(x))  # ...and flipped back
+
+
+def test_flip_bits_touches_exactly_the_planned_bits(rng):
+    x = jnp.asarray(rng.integers(-100, 100, size=64), jnp.int32)
+    idx = jnp.asarray([3, 17, 40], jnp.int32)
+    bit = jnp.asarray([0, 13, 31], jnp.int32)
+    delta = _raw(flip_bits(x, idx, bit)) ^ _raw(x)
+    expect = np.zeros(64, np.int32)
+    for i, b in zip([3, 17, 40], [0, 13, 31]):
+        expect[i] = np.int32(np.uint32(1) << np.uint32(b))
+    np.testing.assert_array_equal(delta, expect)
+
+
+def test_flip_bits_padding_is_noop(rng):
+    x = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    out = flip_bits(x, jnp.full(4, -1, jnp.int32), jnp.zeros(4, jnp.int32))
+    np.testing.assert_array_equal(_raw(out), _raw(x))
+
+
+def test_flip_bits_jit_plan_swap_is_pure(rng):
+    """Traced (idx, bit) operands: the jitted program accepts any plan and
+    never mutates its input leaf."""
+    f = jax.jit(flip_bits)
+    x = jnp.asarray(rng.integers(0, 100, size=16), jnp.int32)
+    x0 = np.asarray(x).copy()
+    a = f(x, jnp.asarray([2], jnp.int32), jnp.asarray([5], jnp.int32))
+    b = f(x, jnp.asarray([9], jnp.int32), jnp.asarray([1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(x), x0)
+    assert np.asarray(a)[2] == (x0[2] ^ (1 << 5))
+    assert np.asarray(b)[9] == (x0[9] ^ (1 << 1))
+
+
+# --------------------------------------------------------------------------- #
+# SEU injector: samplers
+# --------------------------------------------------------------------------- #
+def test_sample_flip_plans_rate_within_binomial_ci(rng):
+    n_configs, size, rate = 300, 4096, 0.01
+    plan = sample_flip_plans(rng, n_configs, size, rate=rate)
+    counts = plan.counts()
+    # z=5 CI on the mean of n_configs Binomial(size, rate) draws
+    half = 5.0 * np.sqrt(size * rate * (1 - rate) / n_configs)
+    assert abs(counts.mean() - size * rate) < half
+    for i in range(n_configs):          # without replacement => involution-safe
+        real = plan.idx[i][plan.idx[i] >= 0]
+        assert len(set(real.tolist())) == real.size
+        assert np.all((real >= 0) & (real < size))
+    assert np.all((plan.bit >= 0) & (plan.bit < 32))
+
+
+def test_sample_flip_plans_pinned_count_and_validation(rng):
+    plan = sample_flip_plans(rng, 7, 100, n_flips=3)
+    np.testing.assert_array_equal(plan.counts(), np.full(7, 3))
+    assert plan.max_flips == 3
+    with pytest.raises(ValueError, match="exactly one"):
+        sample_flip_plans(rng, 2, 10)
+    with pytest.raises(ValueError, match="exactly one"):
+        sample_flip_plans(rng, 2, 10, rate=0.1, n_flips=1)
+    with pytest.raises(ValueError, match="shape"):
+        FlipPlan(np.zeros((2, 3), np.int32), np.zeros((2, 4), np.int32))
+
+
+def test_sample_kv_flips_land_only_in_live_pages(rng):
+    b_, s_, d_ = 4, 16, 8
+    live = np.array([0, 5, 16, 3])
+    plan = sample_kv_flips(rng, 64, (b_, s_, d_), live, rate=0.08)
+    assert plan.counts().sum() > 0
+    for row in plan.idx:
+        for i in row[row >= 0]:
+            b, s = i // (s_ * d_), (i % (s_ * d_)) // d_
+            assert s < live[b], (b, s, live[b])
+    assert np.all((plan.bit >= 0) & (plan.bit < 16))     # bf16 default width
+    # all-dead cache: nothing to flip, every entry is padding
+    dead = sample_kv_flips(rng, 8, (b_, s_, d_), np.zeros(b_, int), rate=0.5)
+    assert dead.counts().sum() == 0
+
+
+def test_flip_schedule_validates_step_shape(rng):
+    plan = sample_flip_plans(rng, 4, 64, n_flips=1)
+    FlipSchedule(site="kv", steps=np.arange(4), plan=plan)   # ok
+    with pytest.raises(ValueError, match="steps"):
+        FlipSchedule(site="kv", steps=np.arange(3), plan=plan)
+
+
+# --------------------------------------------------------------------------- #
+# EventLog: schema round-trip + latency derivations
+# --------------------------------------------------------------------------- #
+def test_new_event_kinds_schema_roundtrip(tmp_path, rng):
+    log = EventLog()
+    plan = sample_flip_plans(rng, 1, 64, n_flips=2)
+    assert emit_flip_events(log, "weights", 3, plan, config=0) == 2
+    log.emit("abft.alarm", step=5, site="probe", n_flagged=1, syndrome_max=17)
+    log.emit("memory.fault", step=0, leaf="w", action="detected")
+    path = tmp_path / "events.jsonl"
+    log.to_jsonl(str(path))
+    assert validate_jsonl(str(path)) == 4
+    with pytest.raises(ValueError, match="missing"):
+        validate_event({"ts": 0.0, "step": 1, "kind": "transient.flip",
+                        "data": {"site": "weights", "index": 3}})
+
+
+def test_transient_records_pair_flips_with_first_alarm_after(rng):
+    log = EventLog()
+    plan = sample_flip_plans(rng, 2, 64, n_flips=1)
+    emit_flip_events(log, "weights", 2, plan, config=0)
+    emit_flip_events(log, "kv", 10, plan, config=1)
+    log.emit("abft.alarm", step=5, site="probe", n_flagged=1, syndrome_max=1)
+    recs = transient_records(log)
+    assert len(recs) == 2
+    caught, missed = recs
+    assert caught["injected_step"] == 2 and caught["detected_step"] == 5
+    assert caught["latency"] == 3
+    assert missed["detected_step"] is None and missed["latency"] is None
+
+
+# --------------------------------------------------------------------------- #
+# ABFT: checksum-augmented matmul
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dispatch", ["twopass", "fused"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_abft_matmul_bitexact_and_silent_when_fault_free(arch, dispatch, rng):
+    """Turning ABFT on must not move a single output bit, and a healthy array
+    must raise no syndromes — per registry config, both dispatches."""
+    d = get_smoke_config(arch).d_model
+    hyca = HyCAConfig(rows=4, cols=4, mode="protected")
+    x = jnp.asarray(rng.standard_normal((5, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
+    state = empty_fault_state()
+    plain = build_ftcontext(state, hyca, dispatch=dispatch)
+    ctx = build_ftcontext(state, hyca, policy=ProtectPolicy(abft=True),
+                          dispatch=dispatch)
+    out, chk_row, chk_col = ctx.abft_matmul(x, w, site="ffn", wc=abft_encode(w))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(plain.matmul(x, w, site="ffn"))
+    )
+    assert chk_row is not None and chk_col is not None
+    assert not bool(abft_check(out, chk_row, chk_col)["detected"])
+
+
+def test_abft_matmul_policy_off_returns_none_lanes(rng):
+    hyca = HyCAConfig(rows=4, cols=4, mode="protected")
+    x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    ctx = build_ftcontext(empty_fault_state(), hyca)   # default policy: abft off
+    out, chk_row, chk_col = ctx.abft_matmul(x, w, site="ffn")
+    assert chk_row is None and chk_col is None
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ctx.matmul(x, w, site="ffn")))
+
+
+def _int_operands(rng, m=8, k=12, n=8):
+    x = jnp.asarray(rng.integers(1, 5, size=(m, k)), jnp.int32)
+    w = jnp.asarray(rng.integers(1, 5, size=(k, n)), jnp.int32)
+    return x, w
+
+
+def test_abft_int32_syndromes_exactly_zero_fault_free(rng):
+    x, w = _int_operands(rng)
+    cfg = HyCAConfig(rows=4, cols=4, mode="unprotected")
+    out, chk_row, chk_col = hyca_matmul_abft(
+        x, w, empty_fault_state(), cfg=cfg, wc=abft_encode(w)
+    )
+    res = abft_check(out, chk_row, chk_col)
+    assert not bool(res["detected"])
+    assert not np.asarray(res["col_flags"]).any()
+    assert not np.asarray(res["row_flags"]).any()
+    # exactness, not tolerance: the integer syndromes are literally zero
+    np.testing.assert_array_equal(
+        np.asarray(chk_row).ravel(), np.asarray(out).sum(axis=0)
+    )
+
+
+def test_abft_detects_mac_corruption(rng):
+    """An unprotected stuck-at PE corrupts accumulations; the carried column
+    checksum (riding a different PE row residue) flags the corrupt column."""
+    x, w = _int_operands(rng)          # outputs < 2^9, so bit 12 always flips
+    cfg = HyCAConfig(rows=4, cols=4, mode="unprotected")
+    fmap = np.zeros((4, 4), bool)
+    fmap[1, 2] = True                  # row 1: off the m%rows==0 checksum lane
+    state = fault_state_from_map(fmap)
+    state = dataclasses.replace(state, stuck_bit=jnp.full(1, 12, jnp.int32),
+                                stuck_val=jnp.ones(1, jnp.int32))
+    out, chk_row, chk_col = hyca_matmul_abft(x, w, state, cfg=cfg, wc=abft_encode(w))
+    res = abft_check(out, chk_row, chk_col)
+    assert bool(res["detected"])
+    # flagged columns are exactly the faulty PE column's residue class
+    flagged = np.flatnonzero(np.asarray(res["col_flags"]))
+    assert flagged.size > 0 and np.all(flagged % 4 == 2)
+
+
+def test_abft_weight_flip_needs_encode_time_checksum(rng):
+    """The defining asymmetry: both checksum sides recomputed from the stored
+    (corrupted) weights are self-consistent — only the encode-time ``wc``
+    breaks, which is why weight SEUs are ABFT-only (docs/faults.md)."""
+    x, w = _int_operands(rng)
+    wc = abft_encode(w)                              # encoded BEFORE the flip
+    w_f = flip_bits(w, jnp.asarray([17], jnp.int32), jnp.asarray([9], jnp.int32))
+    assert not np.array_equal(np.asarray(w_f), np.asarray(w))
+    out_f = jnp.matmul(x, w_f, preferred_element_type=jnp.int32)
+    chk_row = jnp.matmul(x.sum(0, keepdims=True), w_f,
+                         preferred_element_type=jnp.int32)   # reads stored w
+    # blind side: column syndrome consistent with the corrupted weights
+    blind = abft_check(out_f, chk_row, None)
+    assert not bool(blind["detected"])
+    # seeing side: x @ wc still knows what the weights summed to at load
+    chk_col = jnp.matmul(x, wc.reshape(-1, 1), preferred_element_type=jnp.int32)
+    seen = abft_check(out_f, chk_row, chk_col)
+    assert bool(seen["detected"])
+    assert np.asarray(seen["row_flags"]).any()
+
+
+def test_abft_check_agrees_with_f64_reference_oracle(rng):
+    x, w = _int_operands(rng)
+    wc = abft_encode(w)
+    out = jnp.matmul(x, w, preferred_element_type=jnp.int32)
+    out_f = flip_bits(out, jnp.asarray([13], jnp.int32), jnp.asarray([7], jnp.int32))
+    col_syn, row_syn = abft_syndromes_ref(
+        np.asarray(x), np.asarray(w), np.asarray(out_f), wc=np.asarray(wc)
+    )
+    chk_row = jnp.matmul(x.sum(0, keepdims=True), w, preferred_element_type=jnp.int32)
+    chk_col = jnp.matmul(x, wc.reshape(-1, 1), preferred_element_type=jnp.int32)
+    res = abft_check(out_f, chk_row, chk_col)
+    np.testing.assert_array_equal(np.asarray(res["col_flags"]), col_syn != 0)
+    np.testing.assert_array_equal(np.asarray(res["row_flags"]), row_syn != 0)
+    assert bool(res["detected"])            # a flipped output word must flag
+
+
+def test_abft_float_path_tolerates_reassociation(rng):
+    """Float checksums reassociate the reduction — the thresholded check must
+    stay silent fault-free and still catch a large injected error."""
+    x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    out = jnp.matmul(x, w)
+    chk_row = jnp.matmul(x.sum(0, keepdims=True), w)
+    chk_col = jnp.matmul(x, abft_encode(w).reshape(-1, 1))
+    assert not bool(abft_check(out, chk_row, chk_col)["detected"])
+    hit = out.at[3, 5].add(100.0)
+    assert bool(abft_check(hit, chk_row, chk_col)["detected"])
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint memory faults: tamper -> detect -> re-fetch / refuse
+# --------------------------------------------------------------------------- #
+def _tree(rng):
+    return {
+        "w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+        "b": jnp.asarray(rng.integers(0, 100, size=8), jnp.int32),
+    }
+
+
+def _like(tree):
+    return jax.tree.map(lambda a: jnp.zeros_like(a), tree)
+
+
+def test_tamper_detect_refetch_recovers(tmp_path, rng):
+    tree = _tree(rng)
+    ckpt, mirror = str(tmp_path / "ckpt"), str(tmp_path / "mirror")
+    save(ckpt, 0, tree)
+    shutil.copytree(ckpt, mirror)
+    bad = tamper_checkpoint(ckpt, 0, rng, n_leaves=2)
+    assert sorted(corrupt_leaves(ckpt, 0)) == sorted(bad)   # scan names exactly them
+    with pytest.raises(ValueError):                          # plain restore refuses
+        restore(ckpt, 0, _like(tree))
+    log = EventLog()
+    got = guarded_restore(ckpt, 0, _like(tree), log=log,
+                          fetch=pristine_fetcher(mirror))
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(tree[k]))
+    assert corrupt_leaves(ckpt, 0) == []                     # store itself healed
+    recs = memory_fault_records(log)
+    assert sorted(r["leaf"] for r in recs) == sorted(bad)
+    assert all(r["actions"] == ["detected", "refetched"] for r in recs)
+    assert all(r["outcome"] == "refetched" for r in recs)
+
+
+def test_tamper_without_source_refuses(tmp_path, rng):
+    tree = _tree(rng)
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 0, tree)
+    bad = tamper_checkpoint(ckpt, 0, rng)
+    log = EventLog()
+    with pytest.raises(ValueError, match="refused"):
+        guarded_restore(ckpt, 0, _like(tree), log=log)
+    recs = memory_fault_records(log)
+    assert [r["leaf"] for r in recs] == bad
+    assert recs[0]["actions"] == ["detected", "refused"]
+    assert recs[0]["outcome"] == "refused"
+
+
+def test_clean_checkpoint_restores_without_events(tmp_path, rng):
+    tree = _tree(rng)
+    ckpt = str(tmp_path / "ckpt")
+    save(ckpt, 0, tree)
+    log = EventLog()
+    got = guarded_restore(ckpt, 0, _like(tree), log=log)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+    assert len(log) == 0
+
+
+# --------------------------------------------------------------------------- #
+# detector-coverage campaign
+# --------------------------------------------------------------------------- #
+def test_coverage_matrix_ordering_and_zero_retrace():
+    res = run_coverage(CoverageSpec(n_configs=24, seed=3))
+    cov = {(r["fault_class"], r["detector"]): r["coverage"] for r in res["matrix"]}
+    # the headline: ABFT owns the transient classes the scan cannot see
+    assert cov[("transient_weight", "scan")] == 0.0
+    assert cov[("transient_weight", "verify")] == 0.0
+    assert cov[("transient_weight", "abft")] > 0.9
+    assert cov[("transient_mac", "abft")] > cov[("transient_mac", "scan")]
+    # the scan still owns its class: persistent faults across sweeps
+    assert cov[("permanent", "scan")] > 0.5
+    # two seeds per class through ONE compiled program each
+    assert all(n == 1 for n in res["retraces"].values()), res["retraces"]
+
+
+# --------------------------------------------------------------------------- #
+# FaultManager ABFT canary
+# --------------------------------------------------------------------------- #
+def test_fault_manager_abft_canary_alarm_and_counter():
+    from repro.serving import FaultInjector, FaultManager
+    from repro.serving.fault_manager import FaultManagerConfig
+
+    hyca = HyCAConfig(rows=4, cols=4, mode="protected")
+    inj = FaultInjector(4, 4, seed=0)
+    mgr = FaultManager(hyca, inj, FaultManagerConfig(abft=True))
+    mgr.log = EventLog()
+    assert mgr.abft_check() is False                 # healthy array: silent
+    assert mgr.abft_alarms == 0 and len(mgr.log) == 0
+    inj.inject_at(2, 3, bit=20, val=1)               # probe values < 2^20
+    assert mgr.abft_check() is True
+    assert mgr.abft_alarms == 1
+    (ev,) = mgr.log.of_kind("abft.alarm")
+    assert ev.data["site"] == "probe" and ev.data["n_flagged"] >= 1
+    # wired into the scan loop: each step re-checks the canary
+    mgr.scan_step()
+    assert mgr.abft_alarms == 2
