@@ -57,6 +57,11 @@ BUDGETS: tuple[Budget, ...] = (
     Budget("ft_overhead", "fused_speedup_x", float("inf"), min_ratio=0.65),
     Budget("ft_overhead", "fused_overhead_x", 1.8,
            key=("arch", "site"), records="site_results"),
+    # obs_overhead: overhead_x is traced/bare on one machine, so machine
+    # speed divides out entirely — the budget can sit at the design target
+    # itself: telemetry (series ring + spans + histograms) must stay within
+    # 10% of the committed tax, which the baseline pins near 1.0x.
+    Budget("obs_overhead", "overhead_x", 1.10, key=("path",)),
     Budget("scan_latency", "step_ms", 2.5, key=("rows", "cols", "scan_block")),
     Budget("scan_latency", "boot_batched_ms", 2.5, key=("rows", "cols", "scan_block")),
     # fleet_goodput: goodput is deterministic per seed, so the floor is a

@@ -33,6 +33,7 @@ def main(argv=None) -> int:
         fig13_runtime_vs_size,
         fig14_scalability,
         fig15_dppu_grouping,
+        obs_overhead,
         repair_recovery,
         scan_latency,
         serving_goodput,
@@ -55,6 +56,7 @@ def main(argv=None) -> int:
         "serving_goodput": serving_goodput.run,
         "fleet_goodput": fleet_goodput.run,
         "ft_overhead": ft_overhead.run,
+        "obs_overhead": obs_overhead.run,
         "scan_latency": scan_latency.run,
         "detector_coverage": detector_coverage.run,
         # repair_recovery.run persists under experiments/bench/repair.json

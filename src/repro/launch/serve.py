@@ -114,8 +114,27 @@ def main(argv=None):
                          "bit-exact with counters off)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the event log as JSONL to PATH and a "
-                         "Prometheus-style rendering of the summary to "
-                         "PATH.prom (docs/observability.md)")
+                         "Prometheus-style rendering of the summary (gauges "
+                         "+ latency histograms) to PATH.prom "
+                         "(docs/observability.md)")
+    ap.add_argument("--series", action="store_true",
+                    help="carry a repro.obs SeriesBuffer ring through the "
+                         "step loop (per-step device-side telemetry)")
+    ap.add_argument("--series-out", default=None, metavar="PATH",
+                    help="harvest the series ring to PATH.npz (implies "
+                         "--series); feed to python -m repro.obs.replay")
+    ap.add_argument("--spans-out", default=None, metavar="PATH",
+                    help="derive repro.obs.trace lifecycle spans from the "
+                         "event log and write them as JSONL to PATH")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve a stdlib-only HTTP /metrics endpoint on "
+                         "127.0.0.1:PORT during the run (0 = pick a free "
+                         "port); the scrape returns the same Prometheus "
+                         "text --metrics-out writes")
+    ap.add_argument("--metrics-hold", type=float, default=0.0, metavar="SEC",
+                    help="keep the /metrics endpoint up SEC seconds after "
+                         "the run finishes (lets an external scraper catch "
+                         "the final state — the CI obs-smoke lane does)")
     args = ap.parse_args(argv)
 
     cfg = ServerConfig(
@@ -125,6 +144,7 @@ def main(argv=None):
         scan_block=args.scan_block, fault_rate=args.fault_rate, seed=args.seed,
         repair=args.repair, retrain_steps=args.retrain_steps,
         counters=args.counters,
+        series=args.series or args.series_out is not None,
     )
     server = FaultTolerantServer(cfg)
     if args.faults:
@@ -157,6 +177,24 @@ def main(argv=None):
                 n = apply_chaos(srv.injector, cmap)
                 chaos_state["injected"] = n
                 srv.log.emit("chaos.injected", n=n)
+
+    httpd = None
+    if args.metrics_port is not None:
+        from repro.obs.export import histograms_text, prometheus_text
+        from repro.obs.httpd import MetricsServer
+
+        def _render_prom():
+            labels = {"arch": lm.name, "mode": args.mode}
+            return (
+                prometheus_text(server.metrics.summary(
+                    counters=server.counters_host()), labels=labels)
+                + histograms_text(server.metrics.latency_lists(), labels=labels)
+            )
+
+        httpd = MetricsServer(_render_prom, port=args.metrics_port)
+        # flush: scrapers (CI) tail the redirected log for the bound port
+        print(f"[serve] /metrics live on "
+              f"http://127.0.0.1:{httpd.start()}/metrics", flush=True)
 
     t0 = time.perf_counter()
     summary = server.run(trace, max_steps=args.max_steps, on_step=on_step)
@@ -200,9 +238,31 @@ def main(argv=None):
     if args.metrics_out:
         from repro.obs.export import write_metrics_out
 
-        path, prom = write_metrics_out(args.metrics_out, summary, server.log,
-                                       labels={"arch": lm.name, "mode": args.mode})
+        path, prom = write_metrics_out(
+            args.metrics_out, summary, server.log,
+            labels={"arch": lm.name, "mode": args.mode},
+            histograms=server.metrics.latency_lists(),
+        )
         print(f"[serve] metrics: events -> {path}  summary -> {prom}")
+    if args.series_out:
+        from repro.obs.series import save_series
+
+        written = save_series(args.series_out, server.series_host(), meta={
+            "arch": lm.name, "mode": args.mode,
+            "start_step": server.series_start_step(),
+        })
+        print(f"[serve] series: {server.series.written} steps -> {written}")
+    if args.spans_out:
+        from repro.obs.trace import build_traces, write_spans
+
+        n = write_spans(args.spans_out, build_traces(server.log))
+        print(f"[serve] spans: {n} -> {args.spans_out}")
+    if httpd is not None:
+        if args.metrics_hold > 0:
+            print(f"[serve] holding /metrics for {args.metrics_hold:g}s",
+                  flush=True)
+            time.sleep(args.metrics_hold)
+        httpd.stop()
     return summary
 
 

@@ -1,6 +1,6 @@
 """repro.obs — unified observability for the fault-tolerant runtime.
 
-Three layers (docs/observability.md):
+Six layers (docs/observability.md):
 
   * :mod:`repro.obs.counters` — device-side FT counters: a :class:`Counters`
     pytree carried as an optional FTContext leaf, accumulated under jit from
@@ -13,12 +13,25 @@ Three layers (docs/observability.md):
     FaultManager, the repair hook, and the fleet sim; detection and repair
     latency derive from it (exact under chaos injection — injection steps
     are known).
+  * :mod:`repro.obs.trace` — per-entity lifecycle spans over the event log:
+    request traces (enqueue → admit → prefill → decode → complete) and
+    fault traces (inject → suspect → confirmed → repair), OTLP-style JSONL
+    with deterministic ids; ``python -m repro.obs.trace`` derives/validates.
+  * :mod:`repro.obs.series` — device-side time-series telemetry: a
+    :class:`SeriesBuffer` ring pytree carried through the jitted vfleet
+    chunk program and the serving step loop (per-tick queue depth, tokens,
+    fault counts, capacity — zero host sync until harvest).
   * :mod:`repro.obs.export` / :mod:`repro.obs.schema` — a Prometheus-style
-    text exporter for ``--metrics-out`` and the event-schema validator the
-    CI ``obs-smoke`` lane runs over emitted logs.
+    text exporter (gauges + latency histograms) for ``--metrics-out``, the
+    stdlib HTTP ``/metrics`` scrape endpoint (:mod:`repro.obs.httpd`), and
+    the event-schema validator the CI ``obs-smoke`` lane runs over emitted
+    logs.
+  * ``python -m repro.obs.replay`` — postmortem CLI joining the event JSONL
+    with a series artifact into a per-incident chaos timeline.
 
 The bench regression gate (``benchmarks/regress.py``) closes the loop:
-committed ``experiments/bench/*.json`` baselines become per-metric budgets.
+committed ``experiments/bench/*.json`` baselines become per-metric budgets
+(``benchmarks/obs_overhead.py`` pins the telemetry tax itself).
 """
 from repro.obs.counters import (  # noqa: F401
     Counters,
@@ -39,13 +52,26 @@ from repro.obs.fallbacks import (  # noqa: F401
     reset_site_fallbacks,
     site_fallback_total,
 )
+from repro.obs.series import (  # noqa: F401
+    SeriesBuffer,
+    load_series,
+    save_series,
+)
+_TRACE_EXPORTS = ("Span", "Trace", "build_traces", "fault_traces",
+                  "request_traces", "write_spans", "validate_span",
+                  "validate_spans_jsonl")
 
 
 def __getattr__(name):
-    # lazy: `python -m repro.obs.schema` imports this package first, and an
-    # eager schema import there would double-import the CLI module
+    # lazy: `python -m repro.obs.schema` / `-m repro.obs.trace` import this
+    # package first, and an eager import here would double-import the CLI
+    # module (runpy warns about exactly that)
     if name in ("validate_event", "validate_jsonl", "KIND_SCHEMAS"):
         from repro.obs import schema
 
         return getattr(schema, name)
+    if name in _TRACE_EXPORTS:
+        from repro.obs import trace
+
+        return getattr(trace, name)
     raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

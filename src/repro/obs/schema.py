@@ -37,6 +37,12 @@ KIND_SCHEMAS: dict[str, dict[str, tuple[type, ...]]] = {
                     "quality_fraction": (float, int), "retrained": (bool,)},
     "train.step": {"loss": (float, int), "lr": (float, int),
                    "gnorm": (float, int), "ms": (float, int)},
+    # request lifecycle (repro.obs.trace correlates these by rid into spans:
+    # enqueue -> admit -> first_token -> complete; docs/observability.md)
+    "request.enqueue": {"rid": (int,), "prompt_len": (int,)},
+    "request.admit": {"rid": (int,), "slot": (int,)},
+    "request.first_token": {"rid": (int,)},
+    "request.complete": {"rid": (int,), "reason": (str,), "tokens": (int,)},
     # transient-fault stack (repro.transient, docs/faults.md)
     "transient.flip": {"site": (str,), "index": (int,), "bit": (int,)},
     "memory.fault": {"leaf": (str,), "action": (str,)},

@@ -58,6 +58,15 @@ class FleetConfig:
     age_bins: int = 64
     chunk_steps: int = 32
     autoscale: "object | None" = None  # AutoscaleSpec (serving/vfleet.py)
+    # repro.obs.series telemetry (docs/observability.md):
+    #   series       — run_vfleet carries a SeriesBuffer ring through the
+    #                  jitted chunk program (per-tick, per-replica channels;
+    #                  report gains a "series" dict); ignored by run_fleet
+    #   record_steps — run_fleet keeps every replica position's StepRecords
+    #                  across spare swaps (report gains "step_records"); the
+    #                  legacy half of the series↔StepRecord parity pin
+    series: bool = False
+    record_steps: bool = False
     # scan_block=2: the batched ScanEngine sweeps the default 8x8 array every
     # 4 steps — background scanning is cheap enough (one jitted row-block
     # probe per step) to leave on fleet-wide
@@ -142,6 +151,7 @@ def run_fleet(cfg: FleetConfig) -> dict:
     acc_completed = 0
     acc_expired = 0
     lost_with_deadline = 0
+    acc_steps: list[list] = [[] for _ in range(cfg.n_replicas)]
 
     def _harvest(i: int, server: FaultTolerantServer) -> None:
         nonlocal acc_remapped, acc_repair_events, acc_slo_requests
@@ -155,6 +165,11 @@ def run_fleet(cfg: FleetConfig) -> dict:
         acc_completed += sum(1 for c in server.metrics.completions if c.ok)
         acc_expired += sum(1 for c in server.metrics.completions
                            if c.reason == "expired")
+        if cfg.record_steps:
+            # per-position step history survives spare swaps; StepRecord.step
+            # is the fleet clock (replacements inherit step_idx), so the
+            # concatenation is chronological with no step repeated
+            acc_steps[i].extend(server.metrics.steps)
 
     chaos_injected = 0
     chaos_batch = chaos_bits = chaos_vals = None
@@ -291,6 +306,7 @@ def run_fleet(cfg: FleetConfig) -> dict:
         "slo_met": slo_met,
         "slo_misses": slo_requests - slo_met,
         "slo_attainment": (slo_met / slo_requests) if slo_requests else None,
+        "slo_attainment_defined": bool(slo_requests),
         "spares_remaining": pool.remaining,
         "engine": "legacy",
         "scan_steps_total": sum(r.server.manager.scans for r in replicas),
@@ -306,6 +322,11 @@ def run_fleet(cfg: FleetConfig) -> dict:
         "detections": len(det_lat),
         **latency_summary(det_lat, "detect_latency"),
         **latency_summary(sus_lat, "suspect_latency"),
+        # per-replica-position StepRecord history (fleet-clock steps, spare
+        # swaps included) — the legacy half of the series parity pin
+        **({"step_records": [
+            [dataclasses.asdict(s) for s in pos] for pos in acc_steps
+        ]} if cfg.record_steps else {}),
         "replica_summaries": [
             {
                 "region": r.region,

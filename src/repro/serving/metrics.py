@@ -111,6 +111,22 @@ class ServingMetrics:
             if c.first_token_step is not None
         ]
 
+    def latency_lists(self) -> dict[str, list[int]]:
+        """Raw step-latency observations per metric — the histogram
+        exporter's input (repro.obs.export.histograms_text); the same lists
+        ``summary()`` folds into mean/p50/p95."""
+        out: dict[str, list[int]] = {"ttft_steps": self.ttft_steps()}
+        if self.log is not None:
+            det = detection_records(self.log)
+            out["detect_latency_steps"] = [
+                d["latency"] for d in det if d["latency"] is not None]
+            out["suspect_latency_steps"] = [
+                d["suspect_latency"] for d in det
+                if d["suspect_latency"] is not None]
+            out["repair_latency_steps"] = [
+                r["latency"] for r in repair_records(self.log)]
+        return out
+
     def summary(self, reference: dict[int, np.ndarray] | None = None, *,
                 counters: dict | None = None) -> dict:
         n_steps = len(self.steps)
@@ -139,8 +155,12 @@ class ServingMetrics:
             "slo_met": slo_met,
             "slo_misses": slo_requests - slo_met,
             "slo_attainment": (slo_met / slo_requests) if slo_requests else None,
-            "ttft_mean_steps": float(np.mean(ttft)) if ttft else None,
-            "ttft_p95_steps": float(np.percentile(ttft, 95)) if ttft else None,
+            # None leaves are skipped by the .prom exporter, so dashboards
+            # could not tell "no SLAs configured" from a missing scrape —
+            # the companion 0/1 gauge disambiguates
+            "slo_attainment_defined": bool(slo_requests),
+            # same mean/p50/p95 treatment as the detect/repair latency blocks
+            **latency_summary(ttft, "ttft"),
             "queue_depth_mean": float(np.mean([r.queue_depth for r in self.steps])) if self.steps else 0.0,
             "scan_steps": n_pe_scans,
             "scan_sweeps": n_pe_scans / sweep,

@@ -72,9 +72,17 @@ class RequestQueue:
     def __init__(self):
         self._q: deque[Request] = deque()
         self._expired: list[Request] = []
+        # optional repro.obs EventLog (the server wires its own): request
+        # lifecycle events correlate into per-rid spans (repro.obs.trace)
+        self.log = None
 
     def submit(self, req: Request) -> None:
         self._q.append(req)
+        if self.log is not None:
+            self.log.emit(
+                "request.enqueue", step=req.arrival_step,
+                rid=req.rid, prompt_len=req.prompt_len,
+            )
 
     def depth(self) -> int:
         return len(self._q)
@@ -92,6 +100,9 @@ class RequestQueue:
             req = self._q.popleft()
             if req.deadline_step is not None and step + req.min_steps_to_finish() - 1 > req.deadline_step:
                 self._expired.append(req)
+                if self.log is not None:
+                    self.log.emit("request.complete", step=step,
+                                  rid=req.rid, reason="expired", tokens=0)
                 continue
             return req
         return None

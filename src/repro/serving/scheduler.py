@@ -64,6 +64,10 @@ class ContinuousBatchingScheduler:
         self.slots = [Slot(i) for i in range(n_slots)]
         self.effective_slots = n_slots
         self.last_step_tokens = 0  # generated tokens appended by the last commit
+        # optional repro.obs EventLog (the server wires its own): admission,
+        # prefill->decode transitions, and completions become request.* events
+        # that repro.obs.trace correlates into per-rid lifecycle spans
+        self.log = None
 
     # ------------------------------------------------------------------ #
     # capacity + admission
@@ -97,9 +101,15 @@ class ContinuousBatchingScheduler:
             slot.phase = PREFILL
             slot.admitted_step = step
             admitted.append(slot)
+            if self.log is not None:
+                self.log.emit("request.admit", step=step,
+                              rid=req.rid, slot=slot.index)
         return admitted, rejected
 
     def _rejected(self, req: Request, step: int) -> CompletedRequest:
+        if self.log is not None:
+            self.log.emit("request.complete", step=step,
+                          rid=req.rid, reason="dropped", tokens=0)
         return CompletedRequest(
             rid=req.rid, tokens=np.zeros(0, np.int32), prompt_len=req.prompt_len,
             arrival_step=req.arrival_step, admitted_step=None,
@@ -140,6 +150,8 @@ class ContinuousBatchingScheduler:
                     continue
                 s.phase = DECODE
                 s.first_token_step = step
+                if self.log is not None:
+                    self.log.emit("request.first_token", step=step, rid=req.rid)
             tok = int(sampled[s.index])
             s.generated.append(tok)
             self.last_step_tokens += 1
@@ -153,6 +165,9 @@ class ContinuousBatchingScheduler:
 
     def _finish(self, s: Slot, step: int, reason: str) -> CompletedRequest:
         req = s.request
+        if self.log is not None:
+            self.log.emit("request.complete", step=step,
+                          rid=req.rid, reason=reason, tokens=len(s.generated))
         out = CompletedRequest(
             rid=req.rid,
             tokens=np.asarray(s.generated, np.int32),

@@ -99,6 +99,13 @@ class ServerConfig:
     # discovery trace at bundle build is the only cost; the decode graph's
     # dot ops are identical either way.
     counters: bool = False
+    # repro.obs.series: record one scalar telemetry row per step into a
+    # device-side SeriesBuffer ring (the same channels run_vfleet records
+    # per replica) — harvested with ``series_host()``, persisted by
+    # ``launch/serve --series-out`` (docs/observability.md).  The write is
+    # one donated jitted append per step; no device→host sync until harvest.
+    series: bool = False
+    series_capacity: int = 4096    # ring depth: the last N steps are resident
     # ABFT canary on the scan path (repro.transient.abft, docs/faults.md):
     # each scan step also carries the probe matmul's checksum pair and emits
     # abft.alarm on non-zero syndromes — whole-array, step-granular coverage
@@ -229,6 +236,20 @@ class FaultTolerantServer:
         # transitions carry serving-time steps (docs/observability.md)
         self.log = EventLog()
         self.counters = self.bundle.zero_counters() if cfg.counters else None
+        self.series = None
+        self._n_scan_steps = 0
+        if cfg.series:
+            from repro.obs.series import SeriesBuffer
+
+            i32, f32 = jnp.int32, jnp.float32
+            self.series = SeriesBuffer.create(cfg.series_capacity, {
+                "tokens": ((), i32), "queue_depth": ((), i32),
+                "active": ((), i32), "confirmed": ((), i32),
+                "effective_slots": ((), i32), "true_faults": ((), i32),
+                "surviving_cols": ((), i32),
+                "scan_coverage": ((), f32), "capacity_fraction": ((), f32),
+                "quality_fraction": ((), f32),
+            })
         self.injector = injector or FaultInjector(cfg.rows, cfg.cols, seed=cfg.seed + 1)
         self.injector.log = self.log
         self.manager = FaultManager(
@@ -247,6 +268,10 @@ class FaultTolerantServer:
         )
         self.queue = RequestQueue()
         self.scheduler = ContinuousBatchingScheduler(cfg.n_slots, cfg.smax)
+        # request lifecycle events share the server's log: enqueue/admit/
+        # first_token/complete correlate by rid into repro.obs.trace spans
+        self.queue.log = self.log
+        self.scheduler.log = self.log
         self.metrics = ServingMetrics(
             cfg.n_slots, cfg.rows, cfg.cols,
             steps_per_sweep=self.manager.steps_per_sweep,
@@ -379,6 +404,19 @@ class FaultTolerantServer:
         """Host-folded device counters (None when ``cfg.counters`` is off)."""
         return None if self.counters is None else self.counters.to_host()
 
+    def series_host(self) -> dict | None:
+        """Resident rows of the telemetry ring as host arrays, oldest first
+        (None when ``cfg.series`` is off).  At most the last
+        ``series_capacity`` steps are still in the ring; the companion
+        ``series_start_step()`` gives the fleet step of row 0."""
+        if self.series is None:
+            return None
+        return self.series.harvest(start=self.series_start_step())
+
+    def series_start_step(self) -> int:
+        return 0 if self.series is None else max(
+            0, self.series.written - self.series.capacity)
+
     # ------------------------------------------------------------------ #
     def step(self) -> list[CompletedRequest]:
         cfg = self.cfg
@@ -451,6 +489,27 @@ class FaultTolerantServer:
             remapped=self.manager.n_remapped,
             quality_fraction=self.manager.quality_fraction,
         ), completed)
+        if scan_ok is not None:
+            self._n_scan_steps += 1
+        if self.series is not None:
+            # every value is already host-resident (the StepRecord above
+            # uses the same ones), so the series path adds zero host sync —
+            # just one donated jitted ring append
+            from repro.obs.series import record_step as _series_record
+
+            self.series = _series_record(self.series, {
+                "tokens": int(n_decode_tokens),
+                "queue_depth": self.queue.depth(),
+                "active": n_active,
+                "confirmed": self.manager.n_confirmed,
+                "effective_slots": eff,
+                "true_faults": self.injector.n_faults,
+                "surviving_cols": self.manager.surviving_cols,
+                "scan_coverage": min(
+                    1.0, self._n_scan_steps / max(self.metrics.steps_per_sweep, 1)),
+                "capacity_fraction": float(self.manager.capacity_fraction),
+                "quality_fraction": float(self.manager.quality_fraction),
+            })
         self.step_idx += 1
         return completed
 
@@ -488,6 +547,8 @@ class FaultTolerantServer:
             self.metrics.completions.extend(self.scheduler.drain(self.step_idx))
             # never-admitted requests count as failures, not silence
             for req in self.queue.drain_all():
+                self.log.emit("request.complete", step=self.step_idx,
+                              rid=req.rid, reason="dropped", tokens=0)
                 self.metrics.completions.append(CompletedRequest(
                     rid=req.rid, tokens=np.zeros(0, np.int32), prompt_len=req.prompt_len,
                     arrival_step=req.arrival_step, admitted_step=None,

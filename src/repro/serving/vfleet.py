@@ -55,6 +55,7 @@ import numpy as np
 from repro.core.campaign import chaos_maps, chaos_signatures
 from repro.core.engine import empty_fault_state
 from repro.core.scan import probe_operands
+from repro.obs.series import SeriesBuffer
 from repro.runtime.elastic import initial_spares
 from repro.serving.fleet import FleetConfig
 from repro.serving.traffic import sample_trace
@@ -273,6 +274,30 @@ def _tick(geom: _Geom, state: dict, params: dict, t):
     counters["tokens_total"] += tokens_r.sum()
     unconfirmed = (fault & (hits < geom.confirm_hits)).any((1, 2))
     counters["clean_tokens"] += jnp.where(~unconfirmed, tokens_r, 0).sum()
+
+    # series: one per-replica row per tick, captured at the SAME pipeline
+    # point the legacy server records its StepRecord — post-scan, post-
+    # admission, pre-commit/aging/retire (parity-pinned in test_obs_trace);
+    # pure leaf updates, so series-on reuses nothing of and changes nothing
+    # in the report math
+    series = state.get("series")
+    if series is not None:
+        spsw = rows // geom.block
+        probes = sweep * spsw + cursor
+        series = series.record({
+            "tokens": tokens_r,
+            "queue_depth": queue.sum((1, 2)),
+            "active": slots.sum((1, 2)),
+            "confirmed": nconf,
+            "effective_slots": eff,
+            "true_faults": fault.sum((1, 2)).astype(jnp.int32),
+            "surviving_cols": surv,
+            "scan_coverage": jnp.minimum(1.0, probes.astype(jnp.float32) / spsw),
+            "capacity_fraction": surv.astype(jnp.float32) / cols,
+            "quality_fraction": jnp.ones(R, jnp.float32),
+            "live": live,
+        })
+
     slots = jnp.concatenate(                                # countdown shift
         [jnp.zeros((R, K, 1), jnp.int32), slots[:, :, 2:],
          jnp.zeros((R, K, 1), jnp.int32)], axis=2,
@@ -335,6 +360,8 @@ def _tick(geom: _Geom, state: dict, params: dict, t):
         sweep=sweep, queue=queue, slots=slots, spares=spares, dead=dead,
         counters=counters,
     )
+    if series is not None:
+        new_state["series"] = series
     ys = {
         "tokens": tokens_r.sum().astype(jnp.int32),
         "alive": alive,
@@ -470,6 +497,19 @@ def _build(cfg: FleetConfig):
         "key": jax.random.key(cfg.seed),
         "counters": counters,
     }
+    if cfg.series:
+        # ring capacity = one chunk: the driver harvests at every chunk
+        # boundary, so no row is ever overwritten before it is read
+        cap = min(max(1, cfg.chunk_steps), cfg.steps)
+        i32, f32 = jnp.int32, jnp.float32
+        state["series"] = SeriesBuffer.create(cap, {
+            "tokens": ((R,), i32), "queue_depth": ((R,), i32),
+            "active": ((R,), i32), "confirmed": ((R,), i32),
+            "effective_slots": ((R,), i32), "true_faults": ((R,), i32),
+            "surviving_cols": ((R,), i32),
+            "scan_coverage": ((R,), f32), "capacity_fraction": ((R,), f32),
+            "quality_fraction": ((R,), f32), "live": ((R,), jnp.bool_),
+        })
     return geom, params, state, trace
 
 
@@ -522,6 +562,8 @@ def run_vfleet(cfg: FleetConfig, *, log=None) -> dict:
     geom, params, state, trace = _build(cfg)
     chunk = max(1, cfg.chunk_steps)
     ys_all = []
+    series_rows: list[dict] = []
+    harvested = 0
     t0 = time.perf_counter()
     step = 0
     while step < cfg.steps:
@@ -530,6 +572,11 @@ def run_vfleet(cfg: FleetConfig, *, log=None) -> dict:
         state, ys = _chunk(geom, state, params, ts)
         ys_all.append(jax.tree.map(np.asarray, ys))
         step += n
+        if "series" in state:
+            # the one device→host sync of the telemetry path: drain the ring
+            # at the chunk boundary, before its rows can be overwritten
+            series_rows.append(state["series"].harvest(start=harvested))
+            harvested = state["series"].written
         if cfg.autoscale is not None and step < cfg.steps:
             state = _autoscale(cfg, geom, state, step, log)
     wall = time.perf_counter() - t0
@@ -548,7 +595,7 @@ def run_vfleet(cfg: FleetConfig, *, log=None) -> dict:
     w = hist.reshape(-1)
     slo_requests = c["slo_met"] + c["slo_miss"]
     spares_rem = int(np.asarray(state["spares"]).sum())
-    return {
+    report = {
         "engine": "vfleet",
         "steps": cfg.steps,
         "fault_rate": cfg.fault_rate,
@@ -572,6 +619,7 @@ def run_vfleet(cfg: FleetConfig, *, log=None) -> dict:
         "slo_met": c["slo_met"],
         "slo_misses": c["slo_miss"],
         "slo_attainment": (c["slo_met"] / slo_requests) if slo_requests else None,
+        "slo_attainment_defined": bool(slo_requests),
         "spares_remaining": spares_rem,
         "latency_wait_p50": _weighted_percentile(waits, w, 50),
         "latency_wait_p99": _weighted_percentile(waits, w, 99),
@@ -580,3 +628,10 @@ def run_vfleet(cfg: FleetConfig, *, log=None) -> dict:
         "sim_wall_s": wall,
         "n_replicas": cfg.n_replicas,
     }
+    if series_rows:
+        # (steps, R) per channel — time-major, replica axis preserved
+        report["series"] = {
+            k: np.concatenate([rows[k] for rows in series_rows])
+            for k in series_rows[0]
+        }
+    return report
